@@ -1,0 +1,76 @@
+"""Paper Fig. 11: compression ratio vs data type and tile size (jacobi-1d).
+
+Reports the *true ratio* (codec savings only) and the *ratio with padding*
+(what the accelerator actually gains, uncompressed data being padded to bus
+alignment).  Paper peak: 5.09:1 for 18-bit fixed at 200x200 tiles.
+
+The paper does not print its fixed-point Q format.  Two series are reported:
+``max-precision`` (frac = nbits-2, every representable bit used) and
+``paper-matched`` (8 integer bits, the format family under which the
+published 5.09:1 peak is reproduced on PolyBench-style smooth data — Jacobi
+data deltas quantize to <=1 ulp there).
+"""
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core import layout, mars, packing, stencil, transfer
+
+DTYPES = ["fixed12", "fixed18", "fixed24", "fixed28", "float", "double"]
+TILES = [(6, 6), (64, 64), (200, 200)]
+#: paper-matched Q format: 8 integer bits (PolyBench jacobi data is O(1))
+MATCHED_FRAC = {"fixed12": 4, "fixed18": 10, "fixed24": 16, "fixed28": 20}
+
+
+def run():
+    rng = np.random.default_rng(0)
+    # PolyBench jacobi-1d init is the linear ramp (i + 2) / n
+    n = 4000
+    init = (np.arange(n) + 2.0) / n + rng.uniform(-5e-5, 5e-5, n)
+    hist = stencil.jacobi1d_reference(init, 700)
+    print("tile,dtype,format,true_ratio,ratio_with_padding")
+    out = []
+    for ts in TILES:
+        spec = stencil.SPECS["jacobi-1d"](ts)
+        a = mars.analyze(spec)
+        lr = layout.layout_for_analysis(a)
+        rep = tuple(int(x) for x in spec.tile_of(
+            np.array([[hist.shape[0] // 2, 2000]]))[0])
+        m = transfer.TileIOModel(spec, a, lr, rep_tile=rep)
+        for dt in DTYPES:
+            nbits, _ = packing.dtype_widths(dt)
+            formats = [("maxprec", None)]
+            if dt in MATCHED_FRAC:
+                formats.append(("matched", MATCHED_FRAC[dt]))
+            for label, frac in formats:
+                count, bits = 0, 0
+                for pts in m.output_mars_points():
+                    vals = np.array([
+                        stencil.stencil_value("jacobi-1d", hist, p)
+                        for p in pts])
+                    if dt.startswith("fixed"):
+                        words = comp.quantize_fixed(vals, nbits, frac)
+                        nb = nbits
+                    else:
+                        words, nb = comp.words_for(vals, dt)
+                    bits += comp.compressed_cost_bits(words, nb)
+                    count += len(vals)
+                r = packing.compression_ratios(count, nbits, bits)
+                tile_s = "x".join(map(str, ts))
+                print(f"{tile_s},{dt},{label},{r.true_ratio:.2f},"
+                      f"{r.ratio_with_padding:.2f}")
+                out.append((ts, dt, label, r))
+    # paper observations: large tiles compress better; fixed18 at 200x200
+    # reaches ~5:1 with padding (under the matched format)
+    best18 = max(r.ratio_with_padding for ts, dt, lb, r in out
+                 if dt == "fixed18" and ts == (200, 200))
+    small18 = max(r.ratio_with_padding for ts, dt, lb, r in out
+                  if dt == "fixed18" and ts == (6, 6))
+    print(f"# fixed18 200x200 best ratio w/ padding: {best18:.2f} "
+          f"(paper: 5.09); 6x6 best: {small18:.2f}")
+    assert best18 > small18, "large tiles must compress better"
+    assert best18 > 4.0, "paper's ~5:1 regime not reached"
+    return out
+
+
+if __name__ == "__main__":
+    run()

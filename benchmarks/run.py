@@ -1,0 +1,43 @@
+"""Benchmark aggregator: one section per paper table/figure + beyond-paper.
+
+``python -m benchmarks.run``
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.parse_args()
+
+    from benchmarks import (bench_collectives, bench_kvcache,
+                            bench_stencil_kernel, fig10_transfer, fig11_ratio,
+                            table1_mars, table2_compile)
+
+    sections = [
+        ("Table 1 — MARS & burst counts", table1_mars.run),
+        ("Table 2 — layout + analysis time", table2_compile.run),
+        ("Fig 10 — transfer cycles by access pattern", fig10_transfer.run),
+        ("Fig 11 — compression ratio vs dtype x tile", fig11_ratio.run),
+        ("Beyond-paper: compressed collectives", bench_collectives.run),
+        ("Beyond-paper: packed KV cache", bench_kvcache.run),
+        ("Beyond-paper: irredundant stencil kernel", bench_stencil_kernel.run),
+    ]
+    failures = []
+    for title, fn in sections:
+        print(f"\n=== {title} ===")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[ok in {time.time() - t0:.1f}s]")
+        except Exception as e:  # pragma: no cover
+            failures.append((title, e))
+            print(f"[FAILED: {e}]")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Fault-tolerant checkpointing: atomic, keep-k, async, reshard-on-load.
+
+Layout:  <dir>/step_<n>/   (written to step_<n>.tmp then os.replace'd)
+             manifest.json   tree structure, shapes, dtypes, metadata
+             leaf_<i>.npy    one array per pytree leaf
+
+Arrays are written via ``jax.device_get`` (gathering shards); on load they
+are ``device_put`` against the *current* mesh's NamedShardings — so a
+checkpoint written on one mesh restores onto any other (elastic re-mesh /
+reshard-on-load).  On a real fleet the .npy writes would go per-host via
+ocp-style per-shard IO; the layout and protocol here are host-count agnostic
+(manifest + leaves), single-process in this container.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import json
+import os
+import shutil
+from typing import Any, Callable, List, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+#: numpy can't serialize low-precision float dtypes; store raw-int views
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _to_storable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _VIEW_AS:
+        return arr.view(_VIEW_AS[name]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_AS:
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def _tree_paths(tree) -> List[str]:
+    paths = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(kp))
+    return paths
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    async_save: bool = True
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._pool = cf.ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[cf.Future] = None
+
+    # -- write ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> None:
+        self.wait()
+        leaves = jax.tree.leaves(tree)
+        host_leaves = jax.device_get(leaves)    # gather before async write
+        paths = _tree_paths(tree)
+        if self.async_save:
+            self._pending = self._pool.submit(
+                self._write, step, host_leaves, paths, extra or {})
+        else:
+            self._write(step, host_leaves, paths, extra or {})
+
+    def _write(self, step: int, leaves, paths, extra: dict) -> None:
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        if os.path.exists(os.path.join(final, "manifest.json")):
+            return  # this step is already durably published
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra, "leaves": []}
+        for i, (leaf, path) in enumerate(zip(leaves, paths)):
+            arr = np.asarray(leaf)
+            storable, dtype_name = _to_storable(arr)
+            np.save(os.path.join(tmp, f"leaf_{i}.npy"), storable)
+            manifest["leaves"].append(
+                {"path": path, "shape": list(arr.shape), "dtype": dtype_name})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, final)                  # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.directory, name,
+                                               "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any,
+                sharding_fn: Optional[Callable] = None) -> tuple:
+        """Restore into the structure of ``like``; reshard via sharding_fn.
+
+        sharding_fn(leaf_index, abstract_leaf) -> Sharding | None.
+        Returns (tree, extra dict).
+        """
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat, treedef = jax.tree.flatten(like)
+        assert len(flat) == len(manifest["leaves"]), (
+            f"checkpoint has {len(manifest['leaves'])} leaves, "
+            f"expected {len(flat)}")
+        out = []
+        for i, ref in enumerate(flat):
+            want = manifest["leaves"][i]
+            arr = _from_storable(np.load(os.path.join(d, f"leaf_{i}.npy")),
+                                 want["dtype"])
+            assert list(arr.shape) == want["shape"]
+            sh = sharding_fn(i, ref) if sharding_fn else None
+            out.append(jax.device_put(arr, sh) if sh is not None
+                       else jax.device_put(arr))
+        return jax.tree.unflatten(treedef, out), manifest["extra"]

@@ -1,0 +1,18 @@
+"""Core of the reproduction: MARS analysis, layout ILP, packing, compression.
+
+Paper: "An Irredundant and Compressed Data Layout to Optimize Bandwidth
+Utilization of FPGA Accelerators" (Ferry, Derumigny, Derrien, Rajopadhye).
+"""
+from . import blockcodec, compression, layout, mars, packing, stencil, transfer
+from .blockcodec import BlockCodecConfig
+from .layout import LayoutResult, layout_for_analysis, solve_layout
+from .mars import Mars, MarsAnalysis, analyze
+from .stencil import SPECS, StencilSpec
+from .transfer import MODES, TileIOModel, TransferModel
+
+__all__ = [
+    "BlockCodecConfig", "LayoutResult", "Mars", "MarsAnalysis", "MODES",
+    "SPECS", "StencilSpec", "TileIOModel", "TransferModel", "analyze",
+    "blockcodec", "compression", "layout", "layout_for_analysis", "mars",
+    "packing", "solve_layout", "stencil", "transfer",
+]

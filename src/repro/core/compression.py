@@ -1,0 +1,295 @@
+"""Faithful runtime differential compression (paper §2.5) + markers (§4.2.2).
+
+Encodes a sequence of N-bit words ``w0 w1 ... wn``:
+
+* ``w0`` raw (N bits);
+* for each subsequent word, ``d = w_i - w_{i-1}`` (two's complement, N bits),
+  ``k`` = number of significant bits of ``d`` — ``k = bitlen(d)`` when
+  ``d >= 0`` and ``k = bitlen(-d - 1)`` when ``d < 0`` (count after stripping
+  leading zeros / leading ones respectively).  Emit a length field ``k`` in
+  ``F = floor(1 + log2(N))`` bits, the sign bit, then the ``k - 1`` low bits
+  of ``d`` (the top significant bit is implicit: 1 for positives, 0 for
+  negatives).  ``d = 0`` costs F + 1 bits; ``d = -1`` likewise (k = 0).
+
+Decoding: ``d = 2^(k-1) + low`` (sign 0, k > 0), ``d = low - 2^k`` (sign 1),
+``d = 0`` / ``-1`` for k = 0.
+
+This is a bit-exact software model of the paper's FPGA compressor (II = 1
+pipelined there; here, a host-side reference).  ``CompressedStream`` also
+maintains the *markers* of §4.2.2: for each MARS boundary a coarse position
+(aligned bus words) + fine position (bit within the word), allowing a
+consumer to seek to and decode exactly one MARS — the delta chain restarts at
+every MARS so blocks stay atomic.
+
+Floating-point data is compressed on its raw bit pattern (neighbouring values
+share exponent/high-mantissa bits), exactly as the paper's hardware would.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def length_field_bits(nbits: int) -> int:
+    return int(math.floor(1 + math.log2(nbits)))
+
+
+# ---------------------------------------------------------------------------
+# Bit-level reader / writer
+# ---------------------------------------------------------------------------
+
+class BitWriter:
+    __slots__ = ("_acc", "_nbits")
+
+    def __init__(self) -> None:
+        self._acc = 0
+        self._nbits = 0
+
+    def write(self, value: int, nbits: int) -> None:
+        if nbits == 0:
+            return
+        mask = (1 << nbits) - 1
+        self._acc |= (value & mask) << self._nbits
+        self._nbits += nbits
+
+    @property
+    def bit_length(self) -> int:
+        return self._nbits
+
+    def to_words(self, word_bits: int = 32) -> np.ndarray:
+        n_words = (self._nbits + word_bits - 1) // word_bits
+        out = np.zeros(n_words, dtype=np.uint64)
+        acc = self._acc
+        mask = (1 << word_bits) - 1
+        for k in range(n_words):
+            out[k] = acc & mask
+            acc >>= word_bits
+        return out
+
+
+class BitReader:
+    __slots__ = ("_acc", "_pos", "_len")
+
+    def __init__(self, words: np.ndarray, total_bits: int, word_bits: int = 32):
+        acc = 0
+        for k in range(len(words) - 1, -1, -1):
+            acc = (acc << word_bits) | int(words[k])
+        self._acc = acc
+        self._pos = 0
+        self._len = total_bits
+
+    def seek(self, bit: int) -> None:
+        self._pos = bit
+
+    def read(self, nbits: int) -> int:
+        if nbits == 0:
+            return 0
+        if self._pos + nbits > self._len:
+            raise EOFError("read past end of compressed stream")
+        v = (self._acc >> self._pos) & ((1 << nbits) - 1)
+        self._pos += nbits
+        return v
+
+
+# ---------------------------------------------------------------------------
+# Word codec
+# ---------------------------------------------------------------------------
+
+def _significant_len(d: int) -> int:
+    return (d if d >= 0 else -d - 1).bit_length()
+
+
+def compress_words(words: Sequence[int], nbits: int, writer: BitWriter) -> None:
+    """Append the compressed encoding of ``words`` to ``writer``."""
+    F = length_field_bits(nbits)
+    mask = (1 << nbits) - 1
+    half = 1 << (nbits - 1)
+    prev = None
+    for w in words:
+        w = int(w) & mask
+        if prev is None:
+            writer.write(w, nbits)
+        else:
+            d = (w - prev) & mask
+            if d >= half:
+                d -= 1 << nbits  # signed delta
+            k = _significant_len(d)
+            writer.write(k, F)
+            writer.write(0 if d >= 0 else 1, 1)
+            if k > 0:
+                low = (d if d >= 0 else d + (1 << k)) & ((1 << (k - 1)) - 1)
+                writer.write(low, k - 1)
+        prev = w
+
+
+def decompress_words(reader: BitReader, count: int, nbits: int) -> np.ndarray:
+    F = length_field_bits(nbits)
+    mask = (1 << nbits) - 1
+    out = np.zeros(count, dtype=np.uint64)
+    prev = None
+    for i in range(count):
+        if prev is None:
+            prev = reader.read(nbits)
+        else:
+            k = reader.read(F)
+            sign = reader.read(1)
+            if k == 0:
+                d = 0 if sign == 0 else -1
+            else:
+                low = reader.read(k - 1)
+                d = ((1 << (k - 1)) + low) if sign == 0 else (low - (1 << k))
+            prev = (prev + d) & mask
+        out[i] = prev
+    return out
+
+
+def compressed_cost_bits(words: np.ndarray, nbits: int) -> int:
+    """Vectorized size (bits) of the compressed encoding — no stream built.
+
+    Used by the transfer-cycle experiments where only sizes matter (the paper
+    measures cycles, i.e. sizes / bus width).
+    """
+    F = length_field_bits(nbits)
+    w = np.asarray(words, dtype=np.uint64) & np.uint64((1 << nbits) - 1)
+    if w.size == 0:
+        return 0
+    if w.size == 1:
+        return nbits
+    if nbits == 64:
+        # uint64 subtraction wraps mod 2^64; reinterpret as signed delta
+        d = (w[1:] - w[:-1]).view(np.int64)
+    else:
+        d = (w[1:].astype(np.int64) - w[:-1].astype(np.int64))
+        # wrap to signed nbits range
+        span = np.int64(1) << np.int64(nbits)
+        d = ((d + span // 2) % span) - span // 2
+    with np.errstate(over="ignore"):
+        mag = np.where(d >= 0, d, -d - 1).astype(np.uint64)
+    # bit length via float exponent: exact because mag < 2^63 and frexp is
+    # exact for integers below 2^53; for nbits > 52 fall back to object loop
+    if nbits <= 52:
+        k = np.where(mag == 0, 0, np.floor(np.log2(np.maximum(mag, 1))).astype(np.int64) + 1)
+    else:
+        k = np.array([int(int(m).bit_length()) for m in mag], dtype=np.int64)
+    per_word = F + 1 + np.maximum(k - 1, 0)
+    return int(nbits + per_word.sum())
+
+
+# ---------------------------------------------------------------------------
+# MARS stream with markers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Marker:
+    """Position of a compressed MARS (§4.2.2): coarse word + fine bit."""
+    coarse: int   # aligned bus-word index
+    fine: int     # bit offset within the bus word
+
+
+@dataclasses.dataclass
+class CompressedStream:
+    """Packed, compressed sequence of MARS with seek metadata."""
+    words: np.ndarray            # uint64-held bus words
+    total_bits: int
+    bus_bits: int
+    nbits: int                   # uncompressed word width
+    markers: List[Marker]        # one per MARS, in layout order
+    counts: List[int]            # uncompressed word count per MARS
+
+    @property
+    def compressed_bits(self) -> int:
+        return self.total_bits
+
+    def uncompressed_bits(self, padded_to: int | None = None) -> int:
+        width = padded_to if padded_to is not None else self.nbits
+        return width * sum(self.counts)
+
+
+def compress_mars_stream(mars_data: Sequence[np.ndarray], nbits: int,
+                         bus_bits: int = 64) -> CompressedStream:
+    """Compress+pack MARS back to back; record markers at each boundary.
+
+    The delta chain restarts at each MARS so any single MARS is independently
+    decodable (atomicity), matching §4.2: "not all MARS from a given tile are
+    decompressed, we need to be able to seek at the start of a particular
+    MARS".
+    """
+    writer = BitWriter()
+    markers: List[Marker] = []
+    counts: List[int] = []
+    for arr in mars_data:
+        markers.append(Marker(writer.bit_length // bus_bits,
+                              writer.bit_length % bus_bits))
+        flat = np.asarray(arr).reshape(-1)
+        counts.append(flat.size)
+        compress_words(flat, nbits, writer)
+    return CompressedStream(
+        words=writer.to_words(32),
+        total_bits=writer.bit_length,
+        bus_bits=bus_bits,
+        nbits=nbits,
+        markers=markers,
+        counts=counts,
+    )
+
+
+def decompress_mars(stream: CompressedStream, index: int) -> np.ndarray:
+    """Seek (via marker) and decode exactly one MARS."""
+    reader = BitReader(stream.words, stream.total_bits, 32)
+    m = stream.markers[index]
+    reader.seek(m.coarse * stream.bus_bits + m.fine)
+    return decompress_words(reader, stream.counts[index], stream.nbits)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point helpers (paper data types: 12/18/24/28-bit fixed, float, double)
+# ---------------------------------------------------------------------------
+
+def quantize_fixed(x: np.ndarray, nbits: int, frac_bits: int | None = None) -> np.ndarray:
+    """Real -> two's-complement fixed point, returned as unsigned words."""
+    if frac_bits is None:
+        frac_bits = nbits - 2
+    scaled = np.round(np.asarray(x, dtype=np.float64) * (1 << frac_bits)).astype(np.int64)
+    lo, hi = -(1 << (nbits - 1)), (1 << (nbits - 1)) - 1
+    scaled = np.clip(scaled, lo, hi)
+    return (scaled & ((1 << nbits) - 1)).astype(np.uint64)
+
+
+def dequantize_fixed(w: np.ndarray, nbits: int, frac_bits: int | None = None) -> np.ndarray:
+    if frac_bits is None:
+        frac_bits = nbits - 2
+    w = np.asarray(w, dtype=np.uint64).astype(np.int64)
+    half = np.int64(1 << (nbits - 1))
+    signed = np.where(w >= half, w - (np.int64(1) << np.int64(nbits)), w)
+    return signed.astype(np.float64) / (1 << frac_bits)
+
+
+def float_bits(x: np.ndarray, dtype: str) -> Tuple[np.ndarray, int]:
+    """Raw bit patterns of float32/float64 data + word width."""
+    if dtype == "float":
+        return np.asarray(x, dtype=np.float32).view(np.uint32).astype(np.uint64), 32
+    if dtype == "double":
+        return np.asarray(x, dtype=np.float64).view(np.uint64), 64
+    raise KeyError(dtype)
+
+
+DATA_TYPES = {
+    # name -> (nbits, padded storage bits on a 32/64-bit aligned bus)
+    "fixed12": (12, 16),
+    "fixed18": (18, 32),
+    "fixed24": (24, 32),
+    "fixed28": (28, 32),
+    "float": (32, 32),
+    "double": (64, 64),
+}
+
+
+def words_for(data: np.ndarray, dtype: str) -> Tuple[np.ndarray, int]:
+    """Convert real-valued data to codec words for the named paper dtype."""
+    if dtype.startswith("fixed"):
+        nbits = DATA_TYPES[dtype][0]
+        return quantize_fixed(data, nbits), nbits
+    return float_bits(data, dtype)

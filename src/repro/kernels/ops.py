@@ -1,0 +1,103 @@
+"""Public jit'd wrappers around the Pallas kernels (with jnp fallbacks).
+
+``use_pallas`` controls the backend: "auto" picks Pallas on TPU and the pure
+jnp oracle elsewhere (this CPU container validates kernels via
+interpret=True in tests; production traffic on CPU hosts shouldn't pay the
+interpreter cost).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import bitplane, jacobi_mars, kvpack, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(use_pallas: str | bool) -> str:
+    if use_pallas == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    if use_pallas in (True, "pallas"):
+        return "pallas"
+    if use_pallas in ("interpret",):
+        return "interpret"
+    return "ref"
+
+
+# ---------------------------------------------------------------------------
+# delta+bitplane codec
+# ---------------------------------------------------------------------------
+
+def pack_codes(q: jax.Array, bits: int, use_pallas: str | bool = "auto") -> jax.Array:
+    """int32 codes [N, block] -> uint32 planes [N, block//32*bits]."""
+    n, block = q.shape
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.pack_ref(q, bits)
+    return bitplane.pack(q, bits=bits, block=block, interpret=(m == "interpret"))
+
+
+def unpack_codes(planes: jax.Array, bits: int, block: int,
+                 use_pallas: str | bool = "auto") -> jax.Array:
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.unpack_ref(planes, bits, block)
+    return bitplane.unpack(planes, bits=bits, block=block,
+                           interpret=(m == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# KV block packing
+# ---------------------------------------------------------------------------
+
+def kv_quant(x: jax.Array, bits: int = 8, use_pallas: str | bool = "auto"):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.kv_quant_ref(x, bits)
+    return kvpack.kv_quant(x, bits=bits, interpret=(m == "interpret"))
+
+
+def kv_dequant(codes: jax.Array, scales: jax.Array, bits: int = 8,
+               use_pallas: str | bool = "auto") -> jax.Array:
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.kv_dequant_ref(codes, scales, bits)
+    return kvpack.kv_dequant(codes, scales, bits=bits,
+                             interpret=(m == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# Chunked jacobi (stencil macro-pipeline demo)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("t_steps", "width", "use_pallas"))
+def jacobi1d_tiled(x: jax.Array, t_steps: int, width: int = 512,
+                   use_pallas: str | bool = "auto") -> jax.Array:
+    """T jacobi steps (edge-padded open-boundary contract), chunked execution.
+
+    The kernel runs over a padded domain: one full ghost chunk of x[0] on the
+    left (so the first real chunk's carry is exact — the frozen far-left
+    carry sits > width-T cells from any real cell) and edge padding on the
+    right (the paper's 'partial tiles on host' become constant ghost regions
+    here).  Kernel output block c holds cells [cW - T, (c+1)W - T) of the
+    padded domain; real cell m lives at ybuf[m + width + T].
+    """
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.jacobi_chunked_ref(x, t_steps)
+    n = x.shape[0]
+    assert t_steps < width - 2, (t_steps, width)
+    pad_right = (-(n + width + t_steps)) % width + t_steps
+    xp = jnp.concatenate([
+        jnp.full((width,), x[0], dtype=jnp.float32),
+        x.astype(jnp.float32),
+        jnp.full((pad_right,), x[-1], dtype=jnp.float32),
+    ])
+    ybuf = jacobi_mars.jacobi_chunked(xp, t_steps=t_steps, width=width,
+                                      interpret=(m == "interpret"))
+    return jax.lax.dynamic_slice(ybuf, (width + t_steps,), (n,))

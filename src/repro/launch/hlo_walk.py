@@ -1,0 +1,376 @@
+"""Execution-count-aware HLO analyzer.
+
+XLA's ``cost_analysis()`` visits each instruction once, so anything inside a
+``while`` body (our scan-over-layers, attention block scans, SSD chunk scans)
+is under-counted by its trip count.  The optimized HLO text carries
+``backend_config={"known_trip_count":{"n":...}}`` on every counted loop, so
+we rebuild the call graph (ENTRY -> while bodies -> fusions), propagate
+execution counts, and accumulate:
+
+  * dot FLOPs        = 2 x prod(result dims) x prod(lhs contracting dims)
+  * collective bytes = max(result, operand) bytes per collective op
+  * traffic bytes    = operands + results of top-level compute instructions
+                       (an HBM-traffic proxy: fusions read inputs and write
+                       outputs; intermediates stay in registers/VMEM)
+
+All shapes in the partitioned module are per-device, so totals are per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+#: pod size for cross-pod (DCI) attribution on the 512-chip mesh
+POD = 256
+
+
+def _crosses_pod(rhs: str) -> Optional[bool]:
+    """Does this collective's replica group span the pod boundary (512 mesh)?
+
+    Handles iota groups ``replica_groups=[R,D]<=[dims...](T(perm))?`` and
+    explicit ``{{a,b,...},...}`` lists; returns None if undeterminable or
+    not a 512-device module.
+    """
+    import numpy as np
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?",
+                  rhs)
+    if m:
+        r, d = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        total = int(np.prod(dims))
+        if total != 2 * POD:
+            return None
+        ids = np.arange(total).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = np.transpose(ids, perm)
+        groups = ids.reshape(r, d)
+        pods = groups // POD
+        return bool((pods.min(axis=1) != pods.max(axis=1)).any())
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rhs)
+    if m:
+        first = [int(x) for x in m.group(1).split(",")]
+        if max(first) < 2 * POD:
+            return len({i // POD for i in first}) > 1
+    m = re.search(r"source_target_pairs=\{\{(\d+),(\d+)\}", rhs)
+    if m:  # collective-permute
+        a, b = int(m.group(1)), int(m.group(2))
+        return a // POD != b // POD
+    return None
+
+
+def _shapes_info(text: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """(total bytes, [(dtype, dims), ...]) for a shape-or-tuple string."""
+    total = 0
+    shapes = []
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",") if d]
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, dims))
+    return total, shapes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_text: str
+    op: str
+    rhs: str
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\/\* ]+?))\s*([\w\-]+)\((.*)$")
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{", stripped)
+        if header and not line.startswith(" "):
+            cur = header.group(1)
+            comps[cur] = []
+            continue
+        if stripped == "}":
+            # end of computation body (only top-level closers)
+            if not line.startswith(" "):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(Instr(name=m.group(1), result_text=m.group(2),
+                                    op=m.group(3), rhs=m.group(4)))
+    return comps
+
+
+def analyze_hlo(hlo: str) -> Dict[str, object]:
+    comps = _parse_computations(hlo)
+
+    # global name -> result bytes/shape text (instruction names unique per module)
+    result_text_of: Dict[str, str] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            result_text_of[ins.name] = ins.result_text
+
+    # --- call graph with multipliers -------------------------------------
+    entry = None
+    for name in comps:
+        if re.search(r"^ENTRY", hlo, re.M) and name in hlo.split("ENTRY", 1)[1][:400]:
+            entry = name
+            break
+    if entry is None:  # fallback: computation named main*
+        entry = next((n for n in comps if n.startswith("main")), None)
+    counts: Dict[str, float] = {n: 0.0 for n in comps}
+    if entry:
+        counts[entry] = 1.0
+
+    edges: Dict[str, List[Tuple[str, float]]] = {n: [] for n in comps}
+    #: computations whose instructions are NOT schedulable ops (fusion bodies,
+    #: reduce/sort/map apply regions) — they contribute no top-level traffic
+    inlined: set = set()
+    #: computations owned by a named kernel scope (callee of a tagged while);
+    #: optimizer-derived instructions lose their metadata, so ownership is
+    #: propagated structurally down the call graph
+    scope_seed: Dict[str, str] = {}
+    _SCOPE_NAMES = ("flash_attn_interior", "ssd_interior",
+                    "decode_attn_interior")
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.op == "while":
+                for sc in _SCOPE_NAMES:
+                    if sc in ins.rhs:
+                        for mm in re.finditer(
+                                r"(?:body|condition)=%([\w\.\-]+)", ins.rhs):
+                            scope_seed[mm.group(1)] = sc
+                        break
+                trip = 1.0
+                mt = re.search(r'known_trip_count[^0-9]*"n":"(\d+)"', ins.rhs)
+                if mt:
+                    trip = float(mt.group(1))
+                mb = re.search(r"body=%([\w\.\-]+)", ins.rhs)
+                mc = re.search(r"condition=%([\w\.\-]+)", ins.rhs)
+                if mb:
+                    edges[cname].append((mb.group(1), trip))
+                if mc:
+                    edges[cname].append((mc.group(1), trip + 1))
+            elif ins.op == "fusion":
+                mf = re.search(r"calls=%([\w\.\-]+)", ins.rhs)
+                if mf:
+                    edges[cname].append((mf.group(1), 1.0))
+                    inlined.add(mf.group(1))
+            elif ins.op in ("call", "async-start"):
+                mf = re.search(r"to_apply=%([\w\.\-]+)", ins.rhs)
+                if mf:
+                    edges[cname].append((mf.group(1), 1.0))
+            elif ins.op == "conditional":
+                for mb in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{?)[^%]*%([\w\.\-]+)", ins.rhs):
+                    edges[cname].append((mb.group(1), 1.0))
+            else:
+                # reduce/sort/map/scatter/... apply regions are inlined
+                mf = re.search(r"to_apply=%([\w\.\-]+)", ins.rhs)
+                if mf:
+                    edges[cname].append((mf.group(1), 1.0))
+                    inlined.add(mf.group(1))
+                mf2 = re.search(r"select=%([\w\.\-]+)", ins.rhs)
+                if mf2:
+                    inlined.add(mf2.group(1))
+
+    # propagate scope ownership down the call graph
+    comp_scope: Dict[str, str] = dict(scope_seed)
+    for _ in range(64):
+        changed = False
+        for cname, tag in list(comp_scope.items()):
+            for callee, _m in edges.get(cname, []):
+                if callee not in comp_scope:
+                    comp_scope[callee] = tag
+                    changed = True
+        if not changed:
+            break
+
+    # fixed-point propagation (call graph is a DAG; few iterations suffice)
+    for _ in range(64):
+        changed = False
+        new = {n: 0.0 for n in comps}
+        if entry:
+            new[entry] = 1.0
+        for cname in comps:
+            for callee, mult in edges[cname]:
+                if callee in new:
+                    new[callee] += counts.get(cname, 0.0) * mult
+        for n in comps:
+            tgt = new[n]
+            if abs(tgt - counts.get(n, 0.0)) > 1e-9:
+                changed = True
+        if not changed:
+            break
+        counts = new
+
+    # --- fusion parameter access analysis ---------------------------------
+    # A fusion that merely slices (scan xs) or updates-in-place (scan ys /
+    # cache writes) a big buffer only moves the slice/update region, not the
+    # whole operand.  For each fusion body, work out per-parameter charges:
+    #   param used only as the sliced operand of dynamic-slice  -> slice size
+    #   param used only as the target of dynamic-update-slice   -> update size
+    #                                                  (result aliased too)
+    #   otherwise                                                -> full size
+    fusion_access: Dict[str, Dict[int, Tuple[str, int]]] = {}
+    for cname, instrs in comps.items():
+        if cname not in inlined:
+            continue
+        params: Dict[str, int] = {}
+        for ins in instrs:
+            if ins.op == "parameter":
+                mnum = re.match(r"(\d+)", ins.rhs)
+                if mnum:
+                    params[ins.name] = int(mnum.group(1))
+        local_shape = {ins.name: ins.result_text for ins in instrs}
+        access: Dict[int, Tuple[str, int]] = {}
+        consumers: Dict[str, List[Instr]] = {p: [] for p in params}
+        for ins in instrs:
+            if ins.op == "parameter":
+                continue
+            for om in re.finditer(r"%([\w\.\-]+)",
+                                  ins.rhs.split(" metadata")[0]):
+                if om.group(1) in consumers:
+                    consumers[om.group(1)].append(ins)
+        for pname, idx in params.items():
+            cons = consumers[pname]
+            if len(cons) == 1 and cons[0].op == "dynamic-slice" and \
+                    cons[0].rhs.split(",")[0].strip().lstrip("%") == pname:
+                access[idx] = ("slice", _shapes_info(cons[0].result_text)[0])
+            elif len(cons) == 1 and cons[0].op == "dynamic-update-slice":
+                ops_m = re.findall(r"%([\w\.\-]+)",
+                                   cons[0].rhs.split(" metadata")[0])
+                if ops_m and ops_m[0] == pname and len(ops_m) > 1:
+                    upd = _shapes_info(local_shape.get(ops_m[1], ""))[0]
+                    access[idx] = ("dus", upd)
+        if access:
+            fusion_access[cname] = access
+
+    # --- accumulate -------------------------------------------------------
+    flops = 0.0
+    coll: Dict[str, float] = {}
+    traffic = 0.0
+    #: HBM traffic inside named scopes that deploy as fused Pallas kernels
+    #: (VMEM-resident on TPU) — reported separately so the roofline can show
+    #: the as-lowered (XLA:CPU) and kernelized (TPU deployment) memory terms
+    scoped: Dict[str, float] = {}
+    _SCOPES = ("flash_attn_interior", "ssd_interior",
+               "decode_attn_interior")
+    skip_ops = {"get-tuple-element", "tuple", "bitcast", "parameter",
+                "constant", "copy-start", "copy-done", "after-all"}
+    for cname, instrs in comps.items():
+        c = counts.get(cname, 0.0)
+        if c <= 0:
+            continue
+        schedulable = cname not in inlined
+        for ins in instrs:
+            rbytes, rshapes = _shapes_info(ins.result_text)
+            if ins.op == "dot":
+                # result dims x contracting dims
+                lhs_m = re.match(r"%([\w\.\-]+)", ins.rhs)
+                contract = 1
+                mlc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
+                if lhs_m and mlc and lhs_m.group(1) in result_text_of:
+                    _, lshapes = _shapes_info(result_text_of[lhs_m.group(1)])
+                    if lshapes:
+                        ldims = lshapes[0][1]
+                        for di in mlc.group(1).split(","):
+                            if di:
+                                contract *= ldims[int(di)]
+                n_out = 1
+                for _, dims in rshapes[:1]:
+                    for d in dims:
+                        n_out *= d
+                flops += c * 2.0 * n_out * contract
+            if ins.op in _COLLECTIVES or any(
+                    ins.op == f"{k}-start" for k in _COLLECTIVES):
+                base = ins.op.replace("-start", "")
+                operand_bytes, _ = _shapes_info(ins.rhs.split(",", 1)[0]
+                                                if "(" not in ins.rhs else
+                                                ins.rhs[:ins.rhs.find(")")])
+                if _crosses_pod(ins.rhs):
+                    base = "xpod:" + base
+                coll[base] = coll.get(base, 0.0) + c * max(rbytes, operand_bytes)
+            if schedulable and ins.op not in skip_ops \
+                    and not ins.op.endswith("-done"):
+                # traffic proxy: results + named operands' result bytes.
+                # Slice-family ops only touch the sliced region, and
+                # dynamic-update-slice/scatter write in place — count the
+                # moved region, not the full aliased operand.
+                if ins.op in ("dynamic-slice", "slice", "gather"):
+                    t = c * 2 * rbytes
+                elif ins.op in ("dynamic-update-slice", "scatter"):
+                    ops_m = re.findall(r"%([\w\.\-]+)",
+                                       ins.rhs.split(" metadata")[0])
+                    ubytes = (_shapes_info(result_text_of.get(ops_m[1], ""))[0]
+                              if len(ops_m) > 1 else rbytes)
+                    t = c * 2 * min(ubytes, rbytes)
+                elif ins.op == "fusion":
+                    mf = re.search(r"calls=%([\w\.\-]+)", ins.rhs)
+                    access = fusion_access.get(mf.group(1), {}) if mf else {}
+                    ops_m = re.findall(r"%([\w\.\-]+)",
+                                       ins.rhs.split(" metadata")[0])
+                    obytes = 0.0
+                    aliased = False
+                    for oi, oname in enumerate(ops_m):
+                        full = _shapes_info(
+                            result_text_of.get(oname, ""))[0]
+                        kind, sz = access.get(oi, ("full", full))
+                        if kind == "slice":
+                            obytes += sz
+                        elif kind == "dus":
+                            obytes += sz
+                            aliased = True
+                        else:
+                            obytes += full
+                    rb = min(rbytes, obytes) if aliased else rbytes
+                    t = c * (rb + obytes)
+                else:
+                    obytes = 0
+                    for om in re.finditer(r"%([\w\.\-]+)",
+                                          ins.rhs.split(" metadata")[0]):
+                        obytes += _shapes_info(
+                            result_text_of.get(om.group(1), ""))[0]
+                    t = c * (rbytes + obytes)
+                traffic += t
+                tag = comp_scope.get(cname)
+                if tag is None:
+                    for sc in _SCOPES:
+                        if sc in ins.rhs:
+                            tag = sc
+                            break
+                if tag is not None:
+                    scoped[tag] = scoped.get(tag, 0.0) + t
+
+    return {
+        "flops": flops,
+        "collectives": {k: int(v) for k, v in coll.items()},
+        "traffic_bytes": traffic,
+        "scoped_traffic": {k: int(v) for k, v in scoped.items()},
+        "n_computations": len(comps),
+        "entry": entry,
+    }

@@ -1,0 +1,25 @@
+"""Production mesh construction (function, never module-level state)."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi-pod adds a leading 2-pod axis (512).
+
+    REPRO_MULTI_SHAPE=2,8,16 overrides the multi-pod shape (used to scope an
+    XLA SPMD partitioner abort that is specific to certain subgroup sizes).
+    """
+    if multi_pod:
+        shape = tuple(int(x) for x in os.environ.get(
+            "REPRO_MULTI_SHAPE", "2,16,16").split(","))
+        return jax.make_mesh(shape, ("pod", "data", "model"))
+    return jax.make_mesh((16, 16), ("data", "model"))
+
+
+def make_host_mesh():
+    """Whatever this host offers, as a 1D data mesh (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

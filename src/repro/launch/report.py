@@ -1,0 +1,108 @@
+"""Render the dry-run JSON grid into the EXPERIMENTS.md roofline tables.
+
+``python -m repro.launch.report [--out benchmarks/out/dryrun]``
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.dryrun import OUT_DIR
+from repro.launch import cells
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def _pct(x):
+    return "-" if x is None else f"{100 * x:.1f}%"
+
+
+def load(outdir, tag=""):
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        name = os.path.basename(p)[:-5]
+        parts = name.split("__")
+        if len(parts) == 3 + (1 if tag else 0):
+            if tag and parts[-1] != tag:
+                continue
+            if not tag and len(parts) != 3:
+                continue
+            with open(p) as f:
+                recs[tuple(parts[:3])] = json.load(f)
+    return recs
+
+
+def roofline_table(recs, mesh="single"):
+    lines = [
+        "| arch | shape | kind | compute | memory (lowered / kernelized) | "
+        "collective | dominant | MF/HLO | MFU bound |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {a} | {s} | - | FAILED: {r.get('error','?')} | "
+                         "| | | | |")
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {a} | {s} | {r['kind']} | {_fmt_s(rl['compute_s'])} | "
+            f"{_fmt_s(rl['memory_s'])} / {_fmt_s(rl.get('memory_s_kernelized'))} | "
+            f"{_fmt_s(rl['collective_s'])} | {rl['dominant']} -> "
+            f"{rl.get('dominant_kernelized', rl['dominant'])} | "
+            f"{rl['model_flops_ratio']:.2f} | "
+            f"{_pct(rl.get('mfu_bound_kernelized'))} |")
+    for (a, s), why in sorted(cells.SKIPS.items()):
+        lines.append(f"| {a} | {s} | skip | — | — | — | — | — | — |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | mesh | lower | compile | args/dev | temp/dev | "
+        "collective bytes/dev (top ops) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s, m), r in sorted(recs.items()):
+        if not r.get("ok"):
+            lines.append(f"| {a} | {s} | {m} | FAILED | {r.get('error','?')[:60]} | | | |")
+            continue
+        coll = r.get("collectives", {})
+        top = ", ".join(f"{k}:{v / 1e9:.2f}GB"
+                        for k, v in sorted(coll.items(), key=lambda kv: -kv[1])[:3])
+        args_gb = r.get("argument_size_in_bytes", 0) / 1e9
+        temp_gb = r.get("temp_size_in_bytes", 0) / 1e9
+        lines.append(
+            f"| {a} | {s} | {m} | {r.get('lower_s','-')}s | "
+            f"{r.get('compile_s','-')}s | {args_gb:.2f}GB | {temp_gb:.2f}GB | "
+            f"{top} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--table", default="roofline",
+                    choices=["roofline", "dryrun", "both"])
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.out, args.tag)
+    if args.table in ("roofline", "both"):
+        print(roofline_table(recs, args.mesh))
+    if args.table in ("dryrun", "both"):
+        print()
+        print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

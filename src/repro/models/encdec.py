@@ -1,0 +1,229 @@
+"""Whisper-style encoder-decoder backbone (conv/mel frontend stubbed).
+
+``input_specs()`` supplies precomputed frame embeddings (B, enc_seq, d) — the
+assignment's frontend-stub contract.  The encoder is bidirectional
+self-attention; the decoder adds causal self-attention + cross-attention.
+Decode keeps a self-attn KV cache per layer plus the cross-attn K/V computed
+once from the encoder memory ("prefill").
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed import sharding as shd
+from . import layers as L
+
+
+class EncLayer(NamedTuple):
+    ln1: jax.Array
+    attn: L.AttnParams
+    ln2: jax.Array
+    mlp: L.MlpParams
+
+
+class DecLayer(NamedTuple):
+    ln1: jax.Array
+    self_attn: L.AttnParams
+    ln_x: jax.Array
+    cross_attn: L.AttnParams
+    ln2: jax.Array
+    mlp: L.MlpParams
+
+
+class EncDecParams(NamedTuple):
+    embed: L.EmbedParams          # decoder token embeddings + unembed
+    enc_layers: EncLayer          # stacked enc_layers
+    enc_norm: jax.Array
+    dec_layers: DecLayer          # stacked n_layers
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype) -> EncLayer:
+    k1, k2 = jax.random.split(key)
+    return EncLayer(
+        ln1=L.init_rmsnorm(cfg.d_model, dtype),
+        attn=L.init_attn(k1, cfg, dtype),
+        ln2=L.init_rmsnorm(cfg.d_model, dtype),
+        mlp=L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype),
+    )
+
+
+def _init_dec_layer(key, cfg: ModelConfig, dtype) -> DecLayer:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return DecLayer(
+        ln1=L.init_rmsnorm(cfg.d_model, dtype),
+        self_attn=L.init_attn(k1, cfg, dtype),
+        ln_x=L.init_rmsnorm(cfg.d_model, dtype),
+        cross_attn=L.init_attn(k2, cfg, dtype),
+        ln2=L.init_rmsnorm(cfg.d_model, dtype),
+        mlp=L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype),
+    )
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> EncDecParams:
+    ke, k1, k2 = jax.random.split(key, 3)
+    ek = jax.random.split(k1, cfg.enc_layers)
+    dk = jax.random.split(k2, cfg.n_layers)
+    return EncDecParams(
+        embed=L.init_embed(ke, cfg, dtype),
+        enc_layers=jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(ek),
+        enc_norm=L.init_rmsnorm(cfg.d_model, dtype),
+        dec_layers=jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dk),
+    )
+
+
+def param_specs(cfg: ModelConfig) -> EncDecParams:
+    def stack(t):
+        return jax.tree.map(lambda x: (None,) + x, t,
+                            is_leaf=shd._is_logical_leaf)
+    enc = EncLayer(ln1=(None,), attn=L.attn_specs(cfg), ln2=(None,),
+                   mlp=L.mlp_specs(cfg.mlp_act))
+    dec = DecLayer(ln1=(None,), self_attn=L.attn_specs(cfg), ln_x=(None,),
+                   cross_attn=L.attn_specs(cfg), ln2=(None,),
+                   mlp=L.mlp_specs(cfg.mlp_act))
+    return EncDecParams(embed=L.embed_specs(cfg), enc_layers=stack(enc),
+                        enc_norm=(None,), dec_layers=stack(dec))
+
+
+def encode(params: EncDecParams, frames: jax.Array, cfg: ModelConfig,
+           rc: RunConfig) -> jax.Array:
+    """frames: (B, enc_seq, d) stub embeddings -> encoder memory."""
+    B, S, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = frames
+
+    def body(x, lp: EncLayer):
+        h = L.rmsnorm(x, lp.ln1, cfg.norm_eps)
+        qb = S if S % min(rc.q_block, S) else min(rc.q_block, S)
+        kb = S if S % min(rc.kv_block, S) else min(rc.kv_block, S)
+        x = x + L.attention(h, lp.attn, cfg, pos, qb, kb, causal=False)
+        h = L.rmsnorm(x, lp.ln2, cfg.norm_eps)
+        return x + L.mlp(h, lp.mlp, cfg.mlp_act)
+
+    if rc.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(lambda c, lp: (body(c, lp), None), x,
+                        params.enc_layers)
+    return L.rmsnorm(x, params.enc_norm, cfg.norm_eps)
+
+
+def decoder_backbone(params: EncDecParams, tokens: jax.Array,
+                     memory: jax.Array, cfg: ModelConfig, rc: RunConfig
+                     ) -> jax.Array:
+    B, S = tokens.shape
+    x = L.embed(tokens, params.embed)
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, lp: DecLayer):
+        h = L.rmsnorm(x, lp.ln1, cfg.norm_eps)
+        qb = min(rc.q_block, S) if S % min(rc.q_block, S) == 0 else S
+        kb = min(rc.kv_block, S) if S % min(rc.kv_block, S) == 0 else S
+        x = x + L.attention(h, lp.self_attn, cfg, pos, qb, kb)
+        h = L.rmsnorm(x, lp.ln_x, cfg.norm_eps)
+        x = x + L.cross_attention(h, memory, lp.cross_attn, cfg,
+                                  rc.q_block, rc.kv_block)
+        h = L.rmsnorm(x, lp.ln2, cfg.norm_eps)
+        return x + L.mlp(h, lp.mlp, cfg.mlp_act)
+
+    if rc.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(lambda c, lp: (body(c, lp), None), x,
+                        params.dec_layers)
+    return x
+
+
+def decoder_forward(params: EncDecParams, tokens: jax.Array,
+                    memory: jax.Array, cfg: ModelConfig, rc: RunConfig
+                    ) -> jax.Array:
+    """Full logits (tests); serving uses last-position prefill below."""
+    x = decoder_backbone(params, tokens, memory, cfg, rc)
+    return L.logits(x, params.embed, cfg)
+
+
+def prefill(params: EncDecParams, batch, cfg: ModelConfig,
+            rc: RunConfig) -> jax.Array:
+    memory = encode(params, batch["frames"], cfg, rc)
+    x = decoder_backbone(params, batch["tokens"], memory, cfg, rc)
+    return L.logits(x[:, -1:], params.embed, cfg)[:, 0]
+
+
+def loss_fn(params: EncDecParams, batch, cfg: ModelConfig, rc: RunConfig):
+    """batch: dict(frames (B,enc_seq,d), tokens (B,S), labels (B,S))."""
+    memory = encode(params, batch["frames"], cfg, rc)
+    x = decoder_backbone(params, batch["tokens"], memory, cfg, rc)
+    return L.fused_ce_loss(x, params.embed, cfg, batch["labels"],
+                           batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+class EncDecDecodeState(NamedTuple):
+    self_kv: L.KVCache        # stacked over dec layers
+    cross_k: jax.Array        # (L, B, enc_seq, KV, hd) — computed at prefill
+    cross_v: jax.Array
+    pos: jax.Array
+
+
+def init_decode_state(cfg: ModelConfig, rc: RunConfig, batch: int
+                      ) -> EncDecDecodeState:
+    one = jax.eval_shape(lambda: L.init_cache(
+        cfg, batch, rc.seq_len, rc.kv_cache_bits, rc.jdtype))
+    kv = jax.tree.map(
+        lambda s: jnp.zeros((cfg.n_layers,) + s.shape, s.dtype), one)
+    ck = jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.hd),
+                   rc.jdtype)
+    return EncDecDecodeState(self_kv=kv, cross_k=ck, cross_v=ck,
+                             pos=jnp.zeros((batch,), jnp.int32))
+
+
+def decode_state_specs(cfg: ModelConfig, rc: RunConfig) -> EncDecDecodeState:
+    cs = jax.tree.map(lambda t: (None,) + t, L.cache_specs(rc.kv_cache_bits),
+                      is_leaf=shd._is_logical_leaf)
+    return EncDecDecodeState(
+        self_kv=cs,
+        cross_k=(None, "batch", None, None, None),
+        cross_v=(None, "batch", None, None, None),
+        pos=(None,),
+    )
+
+
+def decode_step(params: EncDecParams, state: EncDecDecodeState,
+                tokens: jax.Array, cfg: ModelConfig, rc: RunConfig
+                ) -> Tuple[jax.Array, EncDecDecodeState]:
+    x = L.embed(tokens[:, None], params.embed)
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def scan_fn(x, layer):
+        lp, kv, ck, cv = layer
+        h = L.rmsnorm(x, lp.ln1, cfg.norm_eps)
+        a, kv = L.decode_attention(h, lp.self_attn, cfg, kv, state.pos,
+                                   rc.kv_cache_bits)
+        x = x + a
+        # cross attention against precomputed memory K/V
+        h = L.rmsnorm(x, lp.ln_x, cfg.norm_eps)
+        q = (h @ lp.cross_attn.wq).reshape(B, 1, H, hd)
+        qg = q.reshape(B, 1, KV, H // KV, hd).astype(jnp.float32)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck.astype(jnp.float32))
+        p_attn = jax.nn.softmax(s * hd ** -0.5, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bkgqd", p_attn, cv.astype(jnp.float32))
+        o = jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(B, 1, H * hd)
+        x = x + o.astype(x.dtype) @ lp.cross_attn.wo
+        h = L.rmsnorm(x, lp.ln2, cfg.norm_eps)
+        x = x + L.mlp(h, lp.mlp, cfg.mlp_act)
+        return x, kv
+
+    x, kv = jax.lax.scan(
+        scan_fn, x, (params.dec_layers, state.self_kv,
+                     state.cross_k, state.cross_v))
+    lg = L.logits(x, params.embed, cfg)[:, 0]
+    return lg, EncDecDecodeState(self_kv=kv, cross_k=state.cross_k,
+                                 cross_v=state.cross_v, pos=state.pos + 1)

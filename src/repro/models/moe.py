@@ -1,0 +1,101 @@
+"""Top-k MoE block (mixtral / grok): scatter-based token dispatch.
+
+Static-shape dropping implementation (GShard/Switch lineage): each expert has
+capacity C = ceil(topk * tokens * capacity_factor / E); tokens route to their
+top-k experts, position-in-expert comes from a cumulative one-hot count, and
+overflow tokens are dropped (scatter mode='drop').  The dispatch buffers
+(E, C, d) are the MoE analogue of MARS blocks: atomic (an expert consumes its
+buffer wholly), irredundant (each routed token copy stored once), contiguous.
+
+Baseline sharding is TP-within-expert (ff dim on 'model'); an
+expert-parallel mesh layout is explored in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+
+F32 = jnp.float32
+
+
+class MoeParams(NamedTuple):
+    router: jax.Array      # (d, E)
+    w_gate: jax.Array      # (E, d, ff)
+    w_up: jax.Array        # (E, d, ff)
+    w_down: jax.Array      # (E, ff, d)
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> MoeParams:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return MoeParams(
+        router=(jax.random.normal(k1, (d, E)) * s).astype(dtype),
+        w_gate=(jax.random.normal(k2, (E, d, ff)) * s).astype(dtype),
+        w_up=(jax.random.normal(k3, (E, d, ff)) * s).astype(dtype),
+        w_down=(jax.random.normal(k4, (E, ff, d)) * ff ** -0.5).astype(dtype),
+    )
+
+
+def moe_specs() -> MoeParams:
+    return MoeParams(
+        router=("fsdp", None),
+        w_gate=("experts", "fsdp", "ff"),
+        w_up=("experts", "fsdp", "ff"),
+        w_down=("experts", "ff", "fsdp"),
+    )
+
+
+def moe_block(x: jax.Array, p: MoeParams, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), load-balance aux loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.topk
+    n = B * S
+    xf = x.reshape(n, d)
+
+    gate_logits = (xf @ p.router).astype(F32)             # (n, E)
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                # (n, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch eq. 4/5)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], E, dtype=F32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    cap = int(cfg.capacity_factor * k * n / E)
+    cap = max(cap, 1)
+
+    e_flat = top_e.reshape(-1)                            # (n*k,)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+    pos = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=0) - onehot, e_flat[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)                     # cap -> dropped
+
+    tok_idx = jnp.repeat(jnp.arange(n), k)
+    x_dup = jnp.take(xf, tok_idx, axis=0)                 # (n*k, d)
+    idx = jnp.stack([e_flat, pos_c], axis=1)              # (n*k, 2)
+    buf = jnp.zeros((E, cap, d), x.dtype)
+    buf = buf.at[idx[:, 0], idx[:, 1]].add(
+        x_dup, mode="drop")                               # (E, C, d)
+    buf = shd.act(buf, "experts", "batch", None)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p.w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p.w_up)
+    h = shd.act(h, "experts", "batch", "ff")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p.w_down)     # (E, C, d)
+
+    gathered = out_buf.at[idx[:, 0], idx[:, 1]].get(
+        mode="fill", fill_value=0)                        # (n*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = top_w.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.zeros((n, d), x.dtype).at[tok_idx].add(gathered * w)
+    return out.reshape(B, S, d), aux

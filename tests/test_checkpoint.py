@@ -1,0 +1,64 @@
+"""Checkpoint manager: atomicity, keep-k, dtype fidelity, restore."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(k, (16, 8), jnp.bfloat16),
+        "nested": {"b": jnp.arange(7, dtype=jnp.int32)},
+        "scalar": jnp.float32(3.5),
+    }
+
+
+def test_roundtrip_bf16(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    t = _tree()
+    mgr.save(5, t, extra={"data_step": 5})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    out, extra = mgr.restore(5, like)
+    assert extra == {"data_step": 5}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a, np.float32),
+                              np.asarray(b, np.float32))
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_tmp_dirs_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree())
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp"))
+    assert mgr.all_steps() == [1]  # interrupted write is invisible
+
+
+def test_idempotent_publish(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(7, _tree())
+    mgr.save(7, _tree(1))  # same step again: first publish wins, no crash
+    assert mgr.all_steps() == [7]
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    t = _tree()
+    mgr.save(3, t)
+    mgr.wait()
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    out, _ = mgr.restore(3, like)
+    assert np.array_equal(np.asarray(out["nested"]["b"]), np.arange(7))

@@ -1,0 +1,55 @@
+"""Algorithm 1 (layout ILP): optimality and burst accounting."""
+import itertools
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layout
+
+
+def _random_instance(draw):
+    n = draw(st.integers(2, 7))
+    n_consumers = draw(st.integers(1, 5))
+    sets = []
+    for _ in range(n_consumers):
+        members = draw(st.lists(st.integers(0, n - 1), min_size=1,
+                                max_size=n, unique=True))
+        sets.append(members)
+    return n, sets
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_exact_matches_brute_force(data):
+    n, sets = _random_instance(data.draw)
+    got = layout.solve_layout(n, sets)
+    ref = layout.brute_force_layout(n, sets)
+    assert got.contiguities == ref.contiguities
+    assert got.read_bursts == ref.read_bursts
+    assert sorted(got.order) == list(range(n))  # valid permutation
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_bursts_equal_sets_minus_contiguities(data):
+    n, sets = _random_instance(data.draw)
+    r = layout.solve_layout(n, sets)
+    # each adjacency shared by a consumer saves exactly one burst
+    total = sum(len(set(s)) for s in sets)
+    assert r.read_bursts == total - r.contiguities
+
+
+def test_greedy_fallback_is_permutation():
+    n = layout.EXACT_LIMIT + 4
+    sets = [list(range(0, n, 2)), list(range(1, n, 2)), list(range(n))]
+    r = layout.solve_layout(n, sets)
+    assert sorted(r.order) == list(range(n))
+    assert not r.exact
+    assert r.read_bursts >= 3 - 2  # sanity lower bound
+
+
+def test_paper_example_layout():
+    """§3.2.2: consumers {O2,O3,O4}, {O2}, {O1,O2,O3} -> 3 read bursts."""
+    consumed = [[1, 2, 3], [1], [0, 1, 2]]
+    r = layout.solve_layout(4, consumed)
+    assert r.read_bursts == 3
+    assert r.contiguities == 4

@@ -1,0 +1,86 @@
+"""MARS analysis: paper Table-1 validation + structural invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layout, mars, stencil
+
+
+TABLE1 = [
+    # (name, tile_sizes, n_in, n_out, read_bursts, write_bursts)
+    ("jacobi-1d", (6, 6), 7, 4, 3, 1),
+    ("jacobi-1d", (64, 64), 7, 4, 3, 1),
+    ("jacobi-1d", (200, 200), 7, 4, 3, 1),
+    ("jacobi-2d", (4, 5, 7), 28, 13, 10, 1),
+    ("jacobi-2d", (10, 10, 10), 28, 13, 10, 1),
+    ("seidel-2d", (4, 10, 10), 33, 13, 10, 1),
+]
+
+
+@pytest.mark.parametrize("name,ts,n_in,n_out,rb,wb", TABLE1)
+def test_table1(name, ts, n_in, n_out, rb, wb):
+    spec = stencil.SPECS[name](ts)
+    a = mars.analyze(spec)
+    assert a.n_in == n_in, (a.n_in, n_in)
+    assert a.n_out == n_out
+    lr = layout.layout_for_analysis(a)
+    assert lr.read_bursts == rb
+    assert lr.write_bursts == wb
+    assert lr.exact
+
+
+def test_jacobi1d_diamond_holds_18_points():
+    a = mars.analyze(stencil.jacobi1d_spec((6, 6)))
+    assert a.tile_points == 18  # paper Fig. 1
+
+
+@pytest.mark.parametrize("name,ts", [(n, t) for n, t, *_ in TABLE1])
+def test_partition_invariants(name, ts):
+    """Irredundancy: out-MARS are disjoint and cover the flow-out set."""
+    spec = stencil.SPECS[name](ts)
+    a = mars.analyze(spec)
+    mars.check_partition(a)
+    # every consumed input MARS id references an existing out MARS
+    for producer, ids in a.consumed.items():
+        assert all(0 <= i < a.n_out for i in ids)
+        assert producer != tuple([0] * spec.ndim)
+
+
+def test_translation_invariance():
+    """MARS structure identical for different representative tiles."""
+    spec = stencil.jacobi1d_spec((6, 6))
+    a1 = mars.analyze(spec, rep_tile=(64, 64))
+    a2 = mars.analyze(spec, rep_tile=(11, 29))
+    assert [m.consumers for m in a1.out_mars] == [m.consumers for m in a2.out_mars]
+    assert [m.size for m in a1.out_mars] == [m.size for m in a2.out_mars]
+    assert a1.consumed == a2.consumed
+
+
+def test_atomicity():
+    """Every point of a consumed MARS is read by the consuming tile."""
+    spec = stencil.jacobi1d_spec((6, 6))
+    a = mars.analyze(spec, rep_tile=(40, 40))
+    reads = np.asarray(spec.reads)
+    c0 = np.array([40, 40])
+    # gather all points the tile actually reads from outside
+    pts = mars._enumerate_tile_points(spec, c0)
+    read_pts = (pts[:, None, :] + reads[None, :, :]).reshape(-1, 2)
+    ext = {tuple(p) for p in read_pts
+           if tuple(spec.tile_of(p[None])[0]) != (40, 40)}
+    for producer_off, ids in a.consumed.items():
+        pa = mars.analyze(spec, tuple(c0 + np.array(producer_off)))
+        for mid in ids:
+            for p in pa.out_mars[mid].points:
+                assert tuple(p) in ext, (producer_off, mid, p)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 12), st.integers(4, 12))
+def test_mars_partition_property_random_tiles(t0, t1):
+    """Partition invariants hold across random diamond tile sizes."""
+    spec = stencil.jacobi1d_spec((t0 * 2, t1 * 2))  # even => diamonds nonempty
+    a = mars.analyze(spec)
+    mars.check_partition(a)
+    assert a.n_out >= 1 and a.n_in >= 1
+    sizes = sum(m.size for m in a.out_mars)
+    assert sizes < a.tile_points * len(spec.reads)

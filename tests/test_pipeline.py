@@ -1,0 +1,53 @@
+"""Synthetic data pipeline: determinism, restore, learnable structure."""
+import numpy as np
+
+from repro.configs import base
+from repro.data.pipeline import SyntheticPipeline
+
+
+def _mk(arch="tinyllama-1.1b", **kw):
+    cfg = base.load_smoke(arch)
+    rc = base.RunConfig(seq_len=32, global_batch=4, kind="train", **kw)
+    return cfg, rc
+
+
+def test_deterministic_across_instances():
+    cfg, rc = _mk()
+    a = SyntheticPipeline(cfg, rc, seed=7)
+    b = SyntheticPipeline(cfg, rc, seed=7)
+    for _ in range(3):
+        ba, bb = a.next(), b.next()
+        assert np.array_equal(ba["tokens"], bb["tokens"])
+        assert np.array_equal(ba["labels"], bb["labels"])
+
+
+def test_restore_resumes_exact_stream():
+    cfg, rc = _mk()
+    a = SyntheticPipeline(cfg, rc, seed=1)
+    for _ in range(5):
+        a.next()
+    state = a.state()
+    want = a.next()
+    b = SyntheticPipeline(cfg, rc, seed=99)  # wrong seed, fixed by restore
+    b.restore(state)
+    got = b.next()
+    assert np.array_equal(want["tokens"], got["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg, rc = _mk()
+    p = SyntheticPipeline(cfg, rc)
+    b = p.next()
+    assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    assert b["tokens"].shape == (4, 32)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < cfg.vocab
+
+
+def test_modality_stubs():
+    cfg, rc = _mk("whisper-tiny")
+    b = SyntheticPipeline(cfg, rc).next()
+    assert b["frames"].shape == (4, cfg.enc_seq, cfg.d_model)
+    cfg, rc = _mk("internvl2-76b")
+    b = SyntheticPipeline(cfg, rc).next()
+    assert b["vis_embeds"].shape == (4, cfg.n_vis_tokens, cfg.d_model)
+    assert b["tokens"].shape == (4, 32 - cfg.n_vis_tokens)

@@ -1,0 +1,53 @@
+"""Logical sharding rules: divisibility fallbacks and spec resolution."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+@pytest.fixture()
+def mesh_rules():
+    # 1 real device: an abstract mesh suffices for rule resolution
+    mesh = jax.sharding.AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+    return shd.Rules(mesh=mesh, seq_shard=True, fsdp=True)
+
+
+def test_batch_axis_composition(mesh_rules):
+    assert mesh_rules.resolve("batch", 8) == ("pod", "data")
+    assert mesh_rules.resolve("batch", 3) is None      # not divisible by 4
+
+
+def test_divisibility_fallbacks(mesh_rules):
+    assert mesh_rules.resolve("heads", 6) == "model"
+    assert mesh_rules.resolve("heads", 7) is None      # whisper-style 6h/16tp
+    assert mesh_rules.resolve("vocab", 32001) is None  # hymba odd vocab
+    assert mesh_rules.resolve("ff", 256) == "model"
+
+
+def test_seq_and_fsdp_toggles():
+    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    r = shd.Rules(mesh=mesh, seq_shard=False, fsdp=False)
+    assert r.resolve("seq", 128) is None
+    assert r.resolve("fsdp", 128) is None
+    r2 = shd.Rules(mesh=mesh, seq_shard=True, fsdp=True)
+    assert r2.resolve("seq", 128) == "model"
+    assert r2.resolve("fsdp", 128) == "data"
+
+
+def test_exclude_manual_axis(mesh_rules):
+    import dataclasses
+    r = dataclasses.replace(mesh_rules, exclude=frozenset({"pod"}))
+    assert r.resolve("batch", 8) == ("data",)
+
+
+def test_spec_builds_partition_spec(mesh_rules):
+    spec = mesh_rules.spec((8, 64, 128), ("batch", "seq", None))
+    assert spec == P(("pod", "data"), "model", None)
+
+
+def test_no_rules_is_noop():
+    shd.set_rules(None)
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert shd.act(x, "batch", None) is x

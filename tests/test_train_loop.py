@@ -1,0 +1,56 @@
+"""Fault-tolerant training loop: convergence, restart, determinism."""
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.train.loop import LoopConfig, train
+
+
+@pytest.fixture()
+def cfg_rc():
+    cfg = base.load_smoke("tinyllama-1.1b")
+    rc = base.RunConfig(seq_len=64, global_batch=8, kind="train", remat=False,
+                        q_block=32, kv_block=32, lr=1e-3)
+    return cfg, rc
+
+
+def test_loss_decreases(cfg_rc, tmp_path):
+    cfg, rc = cfg_rc
+    hist = train(cfg, rc, LoopConfig(total_steps=30, ckpt_every=10,
+                                     ckpt_dir=str(tmp_path)), log_every=0)
+    assert hist["loss"][-1] < hist["loss"][0] - 0.3
+
+
+def test_failure_recovery_resumes_batch_sequence(cfg_rc, tmp_path):
+    cfg, rc = cfg_rc
+    ref_dir, failed_dir = str(tmp_path / "a"), str(tmp_path / "b")
+    ref = train(cfg, rc, LoopConfig(total_steps=25, ckpt_every=5,
+                                    ckpt_dir=ref_dir), log_every=0)
+    fired = []
+
+    def hook(step):
+        if step == 13 and not fired:
+            fired.append(1)
+            raise RuntimeError("injected node failure")
+
+    got = train(cfg, rc, LoopConfig(total_steps=25, ckpt_every=5,
+                                    ckpt_dir=failed_dir),
+                failure_hook=hook, log_every=0)
+    assert got["restarts"] == 1
+    # post-recovery losses match the uninterrupted run (deterministic
+    # pipeline + checkpoint restore = bit-identical batch sequence)
+    assert np.allclose(ref["loss"][-5:], got["loss"][-5:], atol=1e-5)
+
+
+def test_gives_up_after_max_restarts(cfg_rc, tmp_path):
+    cfg, rc = cfg_rc
+
+    def hook(step):
+        raise RuntimeError("persistent failure")
+
+    with pytest.raises(RuntimeError):
+        train(cfg, rc, LoopConfig(total_steps=10, ckpt_every=5,
+                                  ckpt_dir=str(tmp_path), max_restarts=2),
+              failure_hook=hook, log_every=0)

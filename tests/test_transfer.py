@@ -1,0 +1,66 @@
+"""Transfer-cycle model: burst accounting matches the layout results."""
+import numpy as np
+import pytest
+
+from repro.core import layout, mars, stencil, transfer
+
+
+@pytest.fixture(scope="module")
+def jacobi_setup():
+    spec = stencil.SPECS["jacobi-1d"]((64, 64))
+    a = mars.analyze(spec)
+    lr = layout.layout_for_analysis(a)
+    rep = tuple(int(x) for x in spec.tile_of(np.array([[150, 2000]]))[0])
+    m = transfer.TileIOModel(spec, a, lr, rep_tile=rep)
+    init = np.cumsum(np.random.default_rng(0).uniform(-0.01, 0.01, 4000)) + 1.0
+    hist = stencil.jacobi1d_reference(init, 300)
+    return m, hist
+
+
+def test_transaction_counts_match_layout(jacobi_setup):
+    m, hist = jacobi_setup
+    io = m.tile_io("fixed18", "mars")
+    assert io.read_transactions == 3 and io.write_transactions == 1
+
+
+def test_mode_ordering(jacobi_setup):
+    """pack < padded; compression < pack (smooth data); minimal is worst."""
+    m, hist = jacobi_setup
+    cyc = {mode: m.tile_io("fixed18", mode, hist=hist).total_cycles
+           for mode in transfer.MODES}
+    assert cyc["mars_pack"] < cyc["mars"]
+    assert cyc["mars_comp"] < cyc["mars_pack"]
+    assert cyc["minimal"] > cyc["mars"]
+    assert cyc["mars"] <= cyc["bbox"] + 8  # 1D data: bbox already bursts
+
+
+def test_float_dtypes_account_padded_width(jacobi_setup):
+    m, hist = jacobi_setup
+    io18 = m.tile_io("fixed18", "mars")
+    io32 = m.tile_io("float", "mars")
+    assert io18.read_bits == io32.read_bits  # both pad to 32-bit words
+    io18p = m.tile_io("fixed18", "mars_pack")
+    assert io18p.read_bits < io32.read_bits
+
+
+def test_burst_init_cost_dominates_minimal():
+    model = transfer.TransferModel(bus_bits=64, burst_init=8)
+    assert model.transaction_cycles(64) == 9
+    assert model.transaction_cycles(64 * 10) == 18
+    # max beats splitting
+    big = model.transaction_cycles(64 * 1000)
+    assert big == 8 * 4 + 1000
+
+
+def test_2d_contiguity_gains():
+    """jacobi-2d: MARS layout beats bbox/minimal on transactions (paper §5.2.3:
+    gains are due to contiguity in higher dims)."""
+    spec = stencil.SPECS["jacobi-2d"]((4, 5, 7))
+    a = mars.analyze(spec)
+    lr = layout.layout_for_analysis(a)
+    m = transfer.TileIOModel(spec, a, lr)
+    io_mars = m.tile_io("float", "mars")
+    io_min = m.tile_io("float", "minimal")
+    assert io_mars.read_transactions == 10
+    assert io_min.read_transactions > 2 * io_mars.read_transactions
+    assert io_mars.total_cycles < io_min.total_cycles
