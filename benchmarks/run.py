@@ -1,40 +1,110 @@
 """Benchmark aggregator: one section per paper table/figure + beyond-paper.
 
-``python -m benchmarks.run``
+``python -m benchmarks.run [--smoke] [--out benchmarks/out] [--seed 0]``
+
+Every run is reproducible and attributable:
+
+* all RNG is seeded explicitly (``--seed`` feeds ``numpy`` global state and
+  ``random``; the sections themselves use fixed ``default_rng`` seeds);
+* ``<out>/BENCH.json`` records per-section status/duration plus run
+  metadata — git SHA, dirty flag, config name, seed, argv;
+* ``<out>/BENCH_obs.json`` is the observability sidecar
+  (``repro.obs.sink.write_sidecar``): every ``transfer/cycles``,
+  ``compression/ratio``, ... series the sections emitted, renderable with
+  ``python -m repro.obs.report <out>``.
+
+``--smoke`` is the CI-safe mode: paper sections only (the jax-jit-heavy
+beyond-paper benches are skipped) with reduced case grids, a few seconds
+end to end.
 """
 import argparse
+import json
+import os
+import random
 import sys
 import time
 
+import numpy as np
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
-    ap.parse_args()
+from repro import obs
 
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out")
+
+
+def sections(smoke: bool):
     from benchmarks import (bench_collectives, bench_kvcache,
                             bench_stencil_kernel, fig10_transfer, fig11_ratio,
                             table1_mars, table2_compile)
 
-    sections = [
-        ("Table 1 — MARS & burst counts", table1_mars.run),
-        ("Table 2 — layout + analysis time", table2_compile.run),
-        ("Fig 10 — transfer cycles by access pattern", fig10_transfer.run),
-        ("Fig 11 — compression ratio vs dtype x tile", fig11_ratio.run),
-        ("Beyond-paper: compressed collectives", bench_collectives.run),
-        ("Beyond-paper: packed KV cache", bench_kvcache.run),
-        ("Beyond-paper: irredundant stencil kernel", bench_stencil_kernel.run),
+    secs = [
+        ("table1_mars", "Table 1 — MARS & burst counts", table1_mars.run),
+        ("table2_compile", "Table 2 — layout + analysis time",
+         table2_compile.run),
+        ("fig10_transfer", "Fig 10 — transfer cycles by access pattern",
+         lambda: fig10_transfer.run(smoke=smoke)),
+        ("fig11_ratio", "Fig 11 — compression ratio vs dtype x tile",
+         lambda: fig11_ratio.run(smoke=smoke)),
+        ("bench_kvcache", "Beyond-paper: packed KV cache", bench_kvcache.run),
     ]
+    if not smoke:
+        secs += [
+            ("bench_collectives", "Beyond-paper: compressed collectives",
+             bench_collectives.run),
+            ("bench_stencil_kernel",
+             "Beyond-paper: irredundant stencil kernel",
+             bench_stencil_kernel.run),
+        ]
+    return secs
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI-safe subset (paper sections, small grids)")
+    ap.add_argument("--quick", action="store_true",
+                    help="deprecated alias for --smoke")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="directory for BENCH.json + BENCH_obs.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    smoke = args.smoke or args.quick
+
+    # explicit global seeding: sections use their own default_rng(0)
+    # streams, but anything reaching numpy/python global state is pinned too
+    np.random.seed(args.seed)
+    random.seed(args.seed)
+
+    config_name = "smoke" if smoke else "full"
+    meta = obs.run_metadata(config=config_name, seed=args.seed, smoke=smoke)
+
+    obs.enable(obs.Registry(), obs.Tracer())
+    results = []
     failures = []
-    for title, fn in sections:
+    for key, title, fn in sections(smoke):
         print(f"\n=== {title} ===")
         t0 = time.time()
         try:
-            fn()
-            print(f"[ok in {time.time() - t0:.1f}s]")
+            with obs.span(f"bench/{key}"):
+                fn()
+            dt = time.time() - t0
+            results.append({"section": key, "ok": True, "seconds": dt})
+            print(f"[ok in {dt:.1f}s]")
         except Exception as e:  # pragma: no cover
+            results.append({"section": key, "ok": False, "seconds":
+                            time.time() - t0, "error": repr(e)})
             failures.append((title, e))
             print(f"[FAILED: {e}]")
+
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "BENCH.json"), "w") as f:
+        json.dump({"meta": meta, "sections": results}, f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
+    sidecar = obs.write_sidecar(args.out, meta=meta)
+    obs.write_jsonl(os.path.join(args.out, "obs.jsonl"), meta=meta)
+    obs.disable()
+    print(f"\nwrote {sidecar} "
+          f"(render: python -m repro.obs.report {args.out})")
     if failures:
         sys.exit(1)
 

@@ -3,16 +3,19 @@
 Paper: "An Irredundant and Compressed Data Layout to Optimize Bandwidth
 Utilization of FPGA Accelerators" (Ferry, Derumigny, Derrien, Rajopadhye).
 """
-from . import blockcodec, compression, layout, mars, packing, stencil, transfer
+from . import (blockcodec, compression, executor, layout, mars, packing,
+               stencil, transfer)
 from .blockcodec import BlockCodecConfig
+from .executor import ExecStats, Jacobi1dMarsExecutor
 from .layout import LayoutResult, layout_for_analysis, solve_layout
 from .mars import Mars, MarsAnalysis, analyze
 from .stencil import SPECS, StencilSpec
-from .transfer import MODES, TileIOModel, TransferModel
+from .transfer import MODES, TileIO, TileIOModel, TransferModel
 
 __all__ = [
-    "BlockCodecConfig", "LayoutResult", "Mars", "MarsAnalysis", "MODES",
-    "SPECS", "StencilSpec", "TileIOModel", "TransferModel", "analyze",
-    "blockcodec", "compression", "layout", "layout_for_analysis", "mars",
-    "packing", "solve_layout", "stencil", "transfer",
+    "BlockCodecConfig", "ExecStats", "Jacobi1dMarsExecutor", "LayoutResult",
+    "Mars", "MarsAnalysis", "MODES", "SPECS", "StencilSpec", "TileIO",
+    "TileIOModel", "TransferModel", "analyze", "blockcodec", "compression",
+    "executor", "layout", "layout_for_analysis", "mars", "packing",
+    "solve_layout", "stencil", "transfer",
 ]

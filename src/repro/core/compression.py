@@ -32,6 +32,8 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import instrument as obs
+
 
 def length_field_bits(nbits: int) -> int:
     return int(math.floor(1 + math.log2(nbits)))
@@ -220,12 +222,28 @@ def compress_mars_stream(mars_data: Sequence[np.ndarray], nbits: int,
     writer = BitWriter()
     markers: List[Marker] = []
     counts: List[int] = []
+    record = obs.enabled()
     for arr in mars_data:
         markers.append(Marker(writer.bit_length // bus_bits,
                               writer.bit_length % bus_bits))
         flat = np.asarray(arr).reshape(-1)
         counts.append(flat.size)
+        before = writer.bit_length
         compress_words(flat, nbits, writer)
+        if record:
+            # per-MARS compressed vs uncompressed (packed) bit histograms:
+            # the Fig. 11 distribution, one observation per MARS
+            obs.hist_observe("compression/mars_bits",
+                             writer.bit_length - before,
+                             kind="compressed", nbits=nbits)
+            obs.hist_observe("compression/mars_bits", flat.size * nbits,
+                             kind="uncompressed", nbits=nbits)
+    if record:
+        obs.counter_inc("compression/markers", len(markers), nbits=nbits)
+        if writer.bit_length > 0:
+            obs.hist_observe(
+                "compression/ratio",
+                nbits * sum(counts) / writer.bit_length, nbits=nbits)
     return CompressedStream(
         words=writer.to_words(32),
         total_bits=writer.bit_length,

@@ -19,6 +19,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro.obs import instrument as obs
+
 from . import compression as comp
 from .layout import LayoutResult, layout_for_analysis
 from .mars import MarsAnalysis, analyze
@@ -35,6 +37,16 @@ class ExecStats:
     uncompressed_bits: int = 0
     mars_read: int = 0
     mars_written: int = 0
+
+    def publish(self, **labels) -> None:
+        """Push every field into the obs registry as ``exec/<field>``.
+
+        Counters accumulate across publishes, so call once per run (the
+        executor does, at the end of :meth:`Jacobi1dMarsExecutor.run`).
+        No-op while obs is disabled.
+        """
+        for f in dataclasses.fields(self):
+            obs.counter_inc(f"exec/{f.name}", getattr(self, f.name), **labels)
 
 
 class Jacobi1dMarsExecutor:
@@ -142,6 +154,11 @@ class Jacobi1dMarsExecutor:
     # -- execution -----------------------------------------------------------
     def run(self, init: np.ndarray) -> np.ndarray:
         """Execute all tiles; return final state, and validate against ref."""
+        with obs.span("executor/run", bench=self.spec.name, n=self.n,
+                      tsteps=self.tsteps, dtype=self.dtype):
+            return self._run(init)
+
+    def _run(self, init: np.ndarray) -> np.ndarray:
         assert init.shape[0] == self.n
         hist = jacobi1d_reference(init, self.tsteps)  # host-side truth for
         # partial tiles (§4.3) and boundary conditions
@@ -194,4 +211,5 @@ class Jacobi1dMarsExecutor:
             for (t, i), v in produced.items():
                 if t == self.tsteps:
                     final[i] = v
+        self.stats.publish(bench=self.spec.name, dtype=self.dtype)
         return final

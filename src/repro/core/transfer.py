@@ -25,6 +25,8 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import instrument as obs
+
 from . import compression as comp
 from . import packing
 from .layout import LayoutResult
@@ -232,7 +234,7 @@ class TileIOModel:
         else:
             raise KeyError(mode)
 
-        return TileIO(
+        io = TileIO(
             read_cycles=sum(self.model.transaction_cycles(b) for b in rbits),
             write_cycles=sum(self.model.transaction_cycles(b) for b in wbits),
             read_bits=int(sum(rbits)),
@@ -240,6 +242,35 @@ class TileIOModel:
             read_transactions=len(rbits),
             write_transactions=len(wbits),
         )
+        if obs.enabled():
+            self._publish_io(io, dtype, mode, rbits, wbits)
+        return io
+
+    def _publish_io(self, io: TileIO, dtype: str, mode: str,
+                    rbits: Sequence[int], wbits: Sequence[int]) -> None:
+        """Emit per-pattern cycle/bit/beat counters for one tile_io call.
+
+        Metric names and labels are the repo-wide convention documented in
+        ``src/repro/obs/README.md``; ``repro.obs.report`` pivots
+        ``transfer/cycles`` on the ``pattern`` label to render Fig. 10.
+        """
+        labels = dict(bench=self.spec.name,
+                      tile="x".join(map(str, self.spec.tile_sizes)),
+                      dtype=dtype, pattern=mode)
+        beats = sum(-(-b // self.model.bus_bits) for b in rbits)
+        beats += sum(-(-b // self.model.bus_bits) for b in wbits)
+        obs.counter_inc("transfer/cycles", io.total_cycles, **labels)
+        obs.counter_inc("burst/beats", beats, **labels)
+        for direction, bits, txns in (("read", io.read_bits,
+                                       io.read_transactions),
+                                      ("write", io.write_bits,
+                                       io.write_transactions)):
+            obs.counter_inc("transfer/bits", bits, dir=direction, **labels)
+            obs.counter_inc("transfer/transactions", txns, dir=direction,
+                            **labels)
+        sp = obs.tracer().current()
+        if sp is not None:
+            sp.add_cycles(io.total_cycles)
 
 
 MODES = ("minimal", "bbox", "mars", "mars_pack", "mars_comp")

@@ -9,11 +9,11 @@ import glob
 import json
 import os
 
-from repro.launch.dryrun import OUT_DIR
 from repro.launch import cells
 
 
-def _fmt_s(x):
+def fmt_s(x):
+    """Human seconds: ``1.23s`` / ``4.5ms`` / ``-`` for missing."""
     if x is None:
         return "-"
     if x >= 1:
@@ -21,8 +21,22 @@ def _fmt_s(x):
     return f"{x * 1e3:.1f}ms"
 
 
-def _pct(x):
+def pct(x):
     return "-" if x is None else f"{100 * x:.1f}%"
+
+
+def md_table(header, rows):
+    """Markdown table from a header tuple + row tuples (all stringified)."""
+    lines = ["| " + " | ".join(str(h) for h in header) + " |",
+             "|" + "---|" * len(header)]
+    lines.extend("| " + " | ".join(str(c) for c in row) + " |"
+                 for row in rows)
+    return "\n".join(lines)
+
+
+# shared with repro.obs.report; old private names kept for callers
+_fmt_s = fmt_s
+_pct = pct
 
 
 def load(outdir, tag=""):
@@ -89,6 +103,7 @@ def dryrun_table(recs):
 
 
 def main():
+    from repro.launch.dryrun import OUT_DIR  # sets XLA_FLAGS; import lazily
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=OUT_DIR)
     ap.add_argument("--tag", default="")

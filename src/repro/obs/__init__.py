@@ -1,0 +1,38 @@
+"""``repro.obs`` — metrics, trace spans, and I/O-cycle accounting.
+
+The observability layer for the reproduction: a labeled metrics registry
+(``metrics``), nested wall-clock + logical-cycle trace spans (``trace``),
+JSONL / summary / sidecar exporters (``sink``), an enable-gated facade that
+hot paths call (``instrument``), and a table-rendering CLI
+(``python -m repro.obs.report``).
+
+Typical use::
+
+    from repro import obs
+
+    with obs.enabled_scope() as (registry, tracer):
+        with obs.span("tile_io", tile=(3, 4)) as sp:
+            obs.counter_inc("transfer/cycles", 123, pattern="mars_comp")
+            sp.add_cycles(123)
+        doc = obs.summary(registry, tracer)
+
+Disabled (the default unless ``REPRO_OBS=1``), every helper is a single
+flag test — see ``instrument`` for the zero-overhead contract and the rule
+about never recording inside ``jax.jit``-traced code.
+"""
+from . import instrument, metrics, sink, trace
+from .instrument import (counter_inc, disable, enable, enabled,
+                         enabled_scope, gauge_set, hist_observe,
+                         instrumented, registry, span, tracer)
+from .metrics import Counter, Gauge, Histogram, Registry, Snapshot, series_key
+from .sink import read_summary, run_metadata, summary, write_jsonl, write_sidecar
+from .trace import Span, SpanRecord, Tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "Snapshot", "Span",
+    "SpanRecord", "Tracer", "counter_inc", "disable", "enable", "enabled",
+    "enabled_scope", "gauge_set", "hist_observe", "instrument",
+    "instrumented", "metrics", "read_summary", "registry", "run_metadata",
+    "series_key", "sink", "span", "summary", "trace", "tracer",
+    "write_jsonl", "write_sidecar",
+]

@@ -1,0 +1,132 @@
+"""Render a run's obs sidecar as tables: ``python -m repro.obs.report <outdir>``.
+
+Reads the ``BENCH_obs.json`` written by ``benchmarks/run.py`` (or any
+:func:`repro.obs.sink.write_sidecar` caller) and prints:
+
+* per-pattern transfer-cycle counters (the paper's Fig. 10 axis:
+  minimal / bbox / mars / mars_pack / mars_comp), grouped by benchmark,
+  tile, and dtype;
+* compression-ratio and bit-size histograms (Fig. 11 axis);
+* every remaining counter / gauge / histogram series;
+* a span rollup (count, wall-clock total, logical-cycle total per name).
+
+Formatting reuses the markdown-table and duration helpers from
+``repro.launch.report`` so EXPERIMENTS.md-style docs stay consistent.
+"""
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+from typing import Dict, Tuple
+
+from repro.launch.report import fmt_s, md_table
+
+from repro.core.transfer import MODES as TRANSFER_PATTERNS
+
+from .metrics import parse_series_key
+from .sink import read_summary
+
+
+def _fmt_val(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float) and not v.is_integer():
+        return f"{v:.4g}"
+    return str(int(v))
+
+
+def transfer_cycles_table(counters: Dict[str, float]) -> str:
+    """Pivot ``transfer/cycles{...}`` counters: one column per pattern."""
+    cells: Dict[Tuple[str, str, str], Dict[str, float]] = defaultdict(dict)
+    for key, v in counters.items():
+        name, labels = parse_series_key(key)
+        if name != "transfer/cycles":
+            continue
+        row = (labels.get("bench", "?"), labels.get("tile", "?"),
+               labels.get("dtype", "?"))
+        cells[row][labels.get("pattern", "?")] = v
+    if not cells:
+        return "(no transfer/cycles counters in this run)"
+    rows = []
+    for (bench, tile, dtype), by_pat in sorted(cells.items()):
+        rows.append((bench, tile, dtype,
+                     *[_fmt_val(by_pat.get(p)) for p in TRANSFER_PATTERNS]))
+    return md_table(("bench", "tile", "dtype", *TRANSFER_PATTERNS), rows)
+
+
+def histogram_table(histograms: Dict[str, dict], prefix: str = "") -> str:
+    rows = []
+    for key, h in sorted(histograms.items()):
+        if not key.startswith(prefix):
+            continue
+        rows.append((key, h["count"], _fmt_val(h["min"]),
+                     _fmt_val(h["mean"]), _fmt_val(h["max"]),
+                     _fmt_val(h["sum"])))
+    if not rows:
+        return f"(no {prefix or 'histogram'}* series in this run)"
+    return md_table(("series", "count", "min", "mean", "max", "sum"), rows)
+
+
+def scalar_table(series: Dict[str, float], kind: str) -> str:
+    rows = [(k, _fmt_val(v)) for k, v in sorted(series.items())]
+    if not rows:
+        return f"(no {kind}s in this run)"
+    return md_table(("series", "value"), rows)
+
+
+def span_table(spans) -> str:
+    agg: Dict[str, list] = defaultdict(lambda: [0, 0.0, 0])
+    for s in spans:
+        a = agg[s["name"]]
+        a[0] += 1
+        a[1] += s["dur_us"]
+        a[2] += s.get("cycles", 0)
+    if not agg:
+        return "(no spans in this run)"
+    rows = [(name, n, fmt_s(us / 1e6), _fmt_val(cyc))
+            for name, (n, us, cyc) in sorted(agg.items())]
+    return md_table(("span", "count", "wall total", "cycles total"), rows)
+
+
+def render(doc: dict) -> str:
+    meta = doc.get("meta", {})
+    m = doc.get("metrics", {})
+    counters = m.get("counters", {})
+    histograms = m.get("histograms", {})
+    out = []
+    stamp = ", ".join(f"{k}={v}" for k, v in sorted(meta.items())
+                      if k in ("git_sha", "config", "seed", "smoke")
+                      and v is not None)
+    out.append(f"# obs report ({stamp})" if stamp else "# obs report")
+    out.append("\n## Transfer cycles by access pattern\n")
+    out.append(transfer_cycles_table(counters))
+    out.append("\n## Compression histograms\n")
+    out.append(histogram_table(histograms, prefix="compression/"))
+    out.append("\n## Counters\n")
+    out.append(scalar_table(counters, "counter"))
+    out.append("\n## Gauges\n")
+    out.append(scalar_table(m.get("gauges", {}), "gauge"))
+    out.append("\n## Other histograms\n")
+    out.append(histogram_table(
+        {k: v for k, v in histograms.items()
+         if not k.startswith("compression/")}))
+    out.append("\n## Spans\n")
+    out.append(span_table(doc.get("spans", [])))
+    return "\n".join(out)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Render BENCH_obs.json metrics as markdown tables.")
+    ap.add_argument("path", help="run output dir (or sidecar file) to report")
+    args = ap.parse_args(argv)
+    try:
+        doc = read_summary(args.path)
+    except FileNotFoundError as e:
+        ap.error(f"no obs sidecar at {e.filename!r} — run "
+                 "`python -m benchmarks.run --smoke --out <dir>` first")
+    print(render(doc))
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,7 @@ from repro.configs.base import ModelConfig, RunConfig
 from repro.data.pipeline import SyntheticPipeline, device_batch
 from repro.distributed import sharding as shd
 from repro.models import model_zoo
+from repro.obs import instrument as obs
 from repro.train import step as train_step_mod
 
 log = logging.getLogger("repro.train")
@@ -99,11 +100,21 @@ def train(cfg: ModelConfig, rc: RunConfig, loop: LoopConfig,
                 batch_np = pipeline.next()
                 batch = device_batch(batch_np, cfg, rc)
                 t0 = time.monotonic()
-                state, metrics = jit_step(state, batch)
-                loss = float(jax.device_get(metrics["loss"]))
+                # span wraps the traced call from outside (obs records
+                # nothing inside jit-compiled code — see repro.obs)
+                with obs.span("train/step", step=step_num, arch=cfg.name):
+                    state, metrics = jit_step(state, batch)
+                    loss = float(jax.device_get(metrics["loss"]))
                 dt = time.monotonic() - t0
+                obs.hist_observe("train/step_ms", dt * 1e3, arch=cfg.name)
+                obs.gauge_set("train/loss", loss, arch=cfg.name)
+                obs.counter_inc("train/steps", 1, arch=cfg.name)
+                obs.counter_inc("train/tokens",
+                                int(np.prod(batch_np["tokens"].shape))
+                                if "tokens" in batch_np else 0, arch=cfg.name)
                 if dt > loop.step_deadline_s:
                     history["stragglers"] += 1
+                    obs.counter_inc("train/stragglers", 1, arch=cfg.name)
                     log.warning("step %d exceeded deadline (%.1fs) — "
                                 "straggler mitigation would re-dispatch",
                                 step_num, dt)

@@ -1,6 +1,10 @@
 """Compression codecs: faithful §2.5 stream + TPU block codec."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax.numpy as jnp
 

@@ -1,7 +1,11 @@
 """Algorithm 1 (layout ILP): optimality and burst accounting."""
 import itertools
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import layout
 

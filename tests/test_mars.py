@@ -1,7 +1,9 @@
 """MARS analysis: paper Table-1 validation + structural invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import layout, mars, stencil
 

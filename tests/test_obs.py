@@ -1,0 +1,301 @@
+"""Observability layer: registry semantics, spans, sinks, zero-cost path,
+and the end-to-end guarantee that published transfer counters equal the
+values `repro.core.transfer` returns directly (ISSUE 6 acceptance)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import layout, mars, stencil, transfer
+from repro.core.executor import ExecStats, Jacobi1dMarsExecutor
+from repro.core.stencil import jacobi1d_spec
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_counter_label_semantics():
+    reg = obs.Registry()
+    reg.counter("transfer/cycles", pattern="mars", dtype="fixed18").inc(10)
+    reg.counter("transfer/cycles", pattern="mars", dtype="fixed18").inc(5)
+    reg.counter("transfer/cycles", pattern="bbox", dtype="fixed18").inc(7)
+    # same name+labels accumulates into one series; different labels split
+    assert reg.counter_value("transfer/cycles", pattern="mars",
+                             dtype="fixed18") == 15
+    assert reg.counter_value("transfer/cycles", pattern="bbox",
+                             dtype="fixed18") == 7
+    assert reg.counter_value("transfer/cycles", pattern="minimal",
+                             dtype="fixed18") == 0
+    # label order does not matter for series identity
+    key1 = obs.series_key("m", {"b": 1, "a": 2})
+    key2 = obs.series_key("m", {"a": 2, "b": 1})
+    assert key1 == key2 == "m{a=2,b=1}"
+    assert len(reg.series("transfer/cycles")) == 2
+
+
+def test_counter_rejects_negative():
+    reg = obs.Registry()
+    with pytest.raises(ValueError):
+        reg.counter("x").inc(-1)
+
+
+def test_gauge_and_histogram():
+    reg = obs.Registry()
+    reg.gauge("serve/kv_bytes", arch="tiny").set(123)
+    reg.gauge("serve/kv_bytes", arch="tiny").set(456)
+    h = reg.histogram("train/step_ms")
+    for v in (1.0, 2.0, 4.0, 1000.0):
+        h.observe(v)
+    snap = reg.snapshot().to_dict()
+    assert snap["gauges"]["serve/kv_bytes{arch=tiny}"] == 456
+    hs = snap["histograms"]["train/step_ms"]
+    assert hs["count"] == 4 and hs["min"] == 1.0 and hs["max"] == 1000.0
+    assert hs["mean"] == pytest.approx(1007.0 / 4)
+    # power-of-two buckets: 1.0 -> b0, 2.0 -> b1, 4.0 -> b2, 1000 -> b10
+    assert hs["buckets"] == {"0": 1, "1": 1, "2": 1, "10": 1}
+
+
+def test_snapshot_reset():
+    reg = obs.Registry()
+    reg.counter("a").inc()
+    assert len(reg) == 1
+    reg.reset()
+    assert len(reg) == 0
+    assert reg.snapshot().to_dict() == {
+        "counters": {}, "gauges": {}, "histograms": {}}
+
+
+# ---------------------------------------------------------------------------
+# trace spans
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_chrome_export():
+    tr = obs.Tracer()
+    with tr.span("outer", tile=(1, 2)) as sp_out:
+        with tr.span("inner") as sp_in:
+            sp_in.add_cycles(100)
+        with tr.span("inner") as sp_in2:
+            sp_in2.add_cycles(50)
+    assert [r.name for r in tr.records] == ["inner", "inner", "outer"]
+    assert [r.depth for r in tr.records] == [1, 1, 0]
+    # logical cycles roll up into the enclosing span
+    outer = tr.records[-1]
+    assert outer.cycles == 150
+    doc = tr.chrome_trace()
+    evs = doc["traceEvents"]
+    assert len(evs) == 3 and all(e["ph"] == "X" for e in evs)
+    # sorted by start time: outer first, then the two inners
+    assert [e["name"] for e in evs] == ["outer", "inner", "inner"]
+    assert evs[0]["args"] == {"tile": "(1, 2)"} or \
+        evs[0]["args"]["tile"] == (1, 2)
+    assert evs[0]["args"]["cycles"] == 150
+    for e in evs:
+        assert e["dur"] >= 0 and "ts" in e and "pid" in e and "tid" in e
+    json.dumps(doc)  # must be serializable
+
+
+def test_span_exception_still_closes():
+    tr = obs.Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError("x")
+    assert len(tr.records) == 1 and tr.depth == 0
+
+
+# ---------------------------------------------------------------------------
+# instrument: enable/disable gating
+# ---------------------------------------------------------------------------
+
+def test_disabled_records_nothing():
+    obs.disable()
+    before = len(obs.instrument.registry())
+    obs.counter_inc("never", 1)
+    obs.gauge_set("never", 1)
+    obs.hist_observe("never", 1)
+    with obs.span("never") as sp:
+        sp.add_cycles(10)
+        sp.set(a=1)
+    assert len(obs.instrument.registry()) == before
+    assert obs.instrument.registry().counter_value("never") == 0
+    # disabled span path allocates nothing: same shared null context
+    assert obs.span("a") is obs.span("b")
+
+
+def test_enabled_scope_restores_state():
+    obs.disable()
+    with obs.enabled_scope() as (reg, tr):
+        assert obs.enabled()
+        obs.counter_inc("x", 2)
+        with obs.span("s"):
+            pass
+        assert reg.counter_value("x") == 2
+        assert len(tr.records) == 1
+    assert not obs.enabled()
+    # scope sinks were private: global registry untouched
+    assert obs.instrument.registry().counter_value("x") == 0
+
+
+def test_instrumented_decorator():
+    calls = []
+
+    @obs.instrumented("myfn", tag="t")
+    def fn(a):
+        calls.append(a)
+        return a + 1
+
+    obs.disable()
+    assert fn(1) == 2  # plain passthrough when disabled
+    with obs.enabled_scope() as (reg, tr):
+        assert fn(2) == 3
+        snap = reg.snapshot().to_dict()
+        assert snap["histograms"]["myfn_ms{tag=t}"]["count"] == 1
+        assert [r.name for r in tr.records] == ["myfn"]
+    assert calls == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: core/transfer publishes exactly what it returns
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def jacobi_model():
+    spec = stencil.SPECS["jacobi-1d"]((64, 64))
+    a = mars.analyze(spec)
+    lr = layout.layout_for_analysis(a)
+    rep = tuple(int(x) for x in spec.tile_of(np.array([[150, 2000]]))[0])
+    m = transfer.TileIOModel(spec, a, lr, rep_tile=rep)
+    init = np.cumsum(np.random.default_rng(0).uniform(-0.01, 0.01, 4000)) + 1.0
+    hist = stencil.jacobi1d_reference(init, 300)
+    return m, hist
+
+
+def test_transfer_counters_match_direct_values(jacobi_model):
+    """ISSUE 6 acceptance: reported mars_comp cycles == transfer.py values."""
+    m, hist = jacobi_model
+    with obs.enabled_scope() as (reg, _):
+        ios = {mode: m.tile_io("fixed18", mode, hist=hist)
+               for mode in transfer.MODES}
+    labels = dict(bench="jacobi-1d", tile="64x64", dtype="fixed18")
+    for mode, io in ios.items():
+        assert reg.counter_value("transfer/cycles", pattern=mode,
+                                 **labels) == io.total_cycles
+        assert reg.counter_value("transfer/bits", pattern=mode, dir="read",
+                                 **labels) == io.read_bits
+        assert reg.counter_value("transfer/transactions", pattern=mode,
+                                 dir="write", **labels) \
+            == io.write_transactions
+    assert reg.counter_value("transfer/cycles", pattern="mars_comp",
+                             **labels) == ios["mars_comp"].total_cycles
+
+
+def test_transfer_span_charged_cycles(jacobi_model):
+    m, hist = jacobi_model
+    with obs.enabled_scope() as (_, tr):
+        with tr.span("tile_io"):
+            io = m.tile_io("fixed18", "mars_comp", hist=hist)
+    assert tr.records[-1].cycles == io.total_cycles
+
+
+def test_disabling_obs_changes_no_result(jacobi_model):
+    """The TileIO numbers are identical with obs on and off."""
+    m, hist = jacobi_model
+    obs.disable()
+    off = m.tile_io("fixed18", "mars_comp", hist=hist)
+    with obs.enabled_scope():
+        on = m.tile_io("fixed18", "mars_comp", hist=hist)
+    assert on == off
+
+
+def test_executor_publishes_stats():
+    rng = np.random.default_rng(2)
+    init = np.cumsum(rng.uniform(-0.005, 0.005, 80)) + 0.5
+    with obs.enabled_scope() as (reg, tr):
+        ex = Jacobi1dMarsExecutor(jacobi1d_spec((6, 6)), 80, 30,
+                                  dtype="fixed18")
+        ex.run(init)
+    labels = dict(bench="jacobi-1d", dtype="fixed18")
+    assert reg.counter_value("exec/full_tiles", **labels) \
+        == ex.stats.full_tiles
+    assert reg.counter_value("exec/compressed_bits", **labels) \
+        == ex.stats.compressed_bits
+    assert reg.counter_value("exec/mars_written", **labels) \
+        == ex.stats.mars_written
+    # compress_mars_stream emitted per-MARS histograms + the run root span
+    snap = reg.snapshot().to_dict()
+    comp_series = [k for k in snap["histograms"]
+                   if k.startswith("compression/mars_bits")]
+    assert comp_series
+    assert any(r.name == "executor/run" for r in tr.records)
+
+
+def test_execstats_publish_is_noop_when_disabled():
+    obs.disable()
+    ExecStats(full_tiles=3).publish(bench="x")
+    assert obs.instrument.registry().counter_value(
+        "exec/full_tiles", bench="x") == 0
+
+
+# ---------------------------------------------------------------------------
+# sinks + report
+# ---------------------------------------------------------------------------
+
+def test_sink_summary_jsonl_sidecar_roundtrip(tmp_path):
+    with obs.enabled_scope() as (reg, tr):
+        obs.counter_inc("transfer/cycles", 42, pattern="mars_comp",
+                        bench="jacobi-1d", tile="6x6", dtype="fixed18")
+        obs.hist_observe("compression/ratio", 5.0, dtype="fixed18")
+        with obs.span("bench/fig10"):
+            pass
+        doc = obs.summary(reg, tr, meta={"config": "test"})
+        jl = obs.write_jsonl(str(tmp_path / "obs.jsonl"), reg, tr,
+                             meta={"config": "test"})
+        sc = obs.write_sidecar(str(tmp_path), reg, tr,
+                               meta={"config": "test"})
+    assert doc["meta"]["config"] == "test"
+    key = ("transfer/cycles{bench=jacobi-1d,dtype=fixed18,"
+           "pattern=mars_comp,tile=6x6}")
+    assert doc["metrics"]["counters"][key] == 42
+    assert doc["spans"][0]["name"] == "bench/fig10"
+
+    lines = [json.loads(l) for l in open(jl)]
+    kinds = {l["kind"] for l in lines}
+    assert {"meta", "counter", "histogram", "span"} <= kinds
+    ctr = next(l for l in lines if l["kind"] == "counter")
+    assert ctr["name"] == "transfer/cycles"
+    assert ctr["labels"]["pattern"] == "mars_comp" and ctr["value"] == 42
+
+    loaded = obs.read_summary(str(tmp_path))  # resolves the sidecar name
+    assert loaded == json.load(open(sc))
+    assert os.path.exists(tmp_path / "trace.json")
+    chrome = json.load(open(tmp_path / "trace.json"))
+    assert chrome["traceEvents"][0]["name"] == "bench/fig10"
+
+
+def test_report_renders_patterns(tmp_path, capsys):
+    from repro.obs import report
+    with obs.enabled_scope() as (reg, tr):
+        for pat, cyc in [("minimal", 700), ("bbox", 300), ("mars", 200),
+                         ("mars_pack", 150), ("mars_comp", 100)]:
+            obs.counter_inc("transfer/cycles", cyc, pattern=pat,
+                            bench="jacobi-1d", tile="6x6", dtype="fixed18")
+        obs.hist_observe("compression/ratio", 5.0, dtype="fixed18")
+        obs.write_sidecar(str(tmp_path), reg, tr, meta={"config": "t"})
+    report.main([str(tmp_path)])
+    out = capsys.readouterr().out
+    for pat in transfer.MODES:
+        assert pat in out
+    assert "compression/ratio" in out
+    # the pivoted row holds the per-pattern values in MODES order
+    row = next(l for l in out.splitlines() if "jacobi-1d" in l)
+    assert [c.strip() for c in row.split("|")[4:9]] \
+        == ["700", "300", "200", "150", "100"]
+
+
+def test_run_metadata_stamps_git():
+    meta = obs.run_metadata(config="x", seed=7)
+    assert meta["config"] == "x" and meta["seed"] == 7
+    # inside this repo the SHA resolves to a 40-hex string
+    assert meta["git_sha"] is None or len(meta["git_sha"]) == 40
