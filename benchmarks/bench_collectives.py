@@ -3,6 +3,11 @@ and wall-time of the codec itself (CPU timing; wire model analytical).
 
 Mirrors how the paper's packing/compression reduce transferred bits: the
 cross-pod link carries packed bitplanes + scale markers instead of raw f32.
+
+Publishes ``collectives/wire_bytes{bits=...}`` / ``collectives/raw_bytes``
+/ ``collectives/leaves{kind=...}`` via ``ExchangeStats.publish`` on a small
+synthetic gradient tree (one compressible matrix + one raw-fallback norm
+vector per size), so the regression gate tracks the wire model per PR.
 """
 import time
 
@@ -12,29 +17,50 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import blockcodec as bc
-from repro.distributed.collectives import compressed_bytes_per_param
+from repro.distributed.collectives import (compressed_bytes_per_param,
+                                           exchange_stats)
 
 SIZES = [1 << 16, 1 << 20, 1 << 22]
 BITS = [4, 6, 8, 16]
 
+#: CI-safe subset: one size, the paper-relevant bit widths
+SMOKE_SIZES = [1 << 16]
+SMOKE_BITS = [4, 8]
 
-def run():
+
+def _grad_tree(n: int) -> dict:
+    """One compressible matrix leaf + one tiny raw-fallback leaf."""
+    rng = np.random.default_rng(0)
+    return {
+        "w": jnp.asarray(rng.standard_normal((n // 128, 128)), jnp.float32),
+        "norm_scale": jnp.asarray(rng.standard_normal(7), jnp.float32),
+    }
+
+
+def run(smoke: bool = False):
+    sizes = SMOKE_SIZES if smoke else SIZES
+    bits_grid = SMOKE_BITS if smoke else BITS
+    reps = 1 if smoke else 3
     print("n_values,bits,wire_bytes_per_param,reduction_vs_f32,"
           "codec_us_per_mb")
-    for n in SIZES:
+    for n in sizes:
         x = jnp.asarray(np.random.default_rng(0).standard_normal(n),
                         jnp.float32)
-        for bits in BITS:
+        tree = _grad_tree(n)
+        for bits in bits_grid:
             cfg = bc.BlockCodecConfig(bits=bits, block=256, delta=False)
             f = jax.jit(lambda v: bc.compress(v, cfg))
             planes, scale = f(x)
             jax.block_until_ready(planes)
             t0 = time.perf_counter()
-            for _ in range(3):
+            for _ in range(reps):
                 planes, scale = f(x)
             jax.block_until_ready(planes)
-            dt = (time.perf_counter() - t0) / 3
+            dt = (time.perf_counter() - t0) / reps
             wire = compressed_bytes_per_param(bits)
+            # wire accounting for the exchange of the synthetic grad tree:
+            # the gate tracks these exact byte counts per (n, bits)
+            exchange_stats(tree, bits).publish(n=n)
             print(f"{n},{bits},{wire:.3f},{4.0 / wire:.2f},"
                   f"{dt * 1e6 / (n * 4 / 1e6):.1f}")
 

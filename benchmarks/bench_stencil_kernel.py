@@ -3,17 +3,27 @@
 Compares the HBM traffic of the kernel's irredundant scheme (carry MARS
 through VMEM scratch) against conventional overlapped (trapezoidal) tiling
 that re-reads a T-wide halo per chunk — the paper's irredundancy property at
-kernel level.  Also times the interpret-mode kernel vs the jnp reference for
+kernel level.  Also times the kernel path vs the jnp reference for
 correctness-path sanity (CPU times are not TPU predictions).
-"""
-import time
 
+The instrumented ``repro.kernels.ops`` entry points publish
+``kernels/hbm_bytes{kernel=jacobi1d,...}`` for every call, which the
+regression gate tracks; this bench additionally publishes the analytic
+overlapped-vs-irredundant model as ``kernels/halo_overhead_bytes``.
+
+In smoke mode the grid shrinks and the kernel runs on the ``ref`` backend
+(Pallas interpret mode is an order of magnitude slower and unavailable on
+some jax builds); the full run keeps ``interpret`` for kernel-path sanity.
+"""
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import ops, ref
+
+CASES = [(1 << 16, 16, 512), (1 << 18, 64, 512), (1 << 18, 100, 128)]
+SMOKE_CASES = [(1 << 14, 16, 512)]
 
 
 def traffic_model(n, t_steps, width):
@@ -23,17 +33,35 @@ def traffic_model(n, t_steps, width):
     return irredundant, overlapped
 
 
-def run():
+def codec_roundtrip(backend: str):
+    """Tiny pack/unpack + KV quant roundtrips through the instrumented
+    ``ops`` entry points, so the gate also tracks the codec kernels'
+    ``kernels/hbm_bytes`` series."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.integers(-60, 60, (8, 128)), jnp.int32)
+    planes = ops.pack_codes(q, 8, use_pallas=backend)
+    q2 = ops.unpack_codes(planes, 8, 128, use_pallas=backend)
+    assert bool((q == q2).all()), "pack/unpack roundtrip mismatch"
+    x = jnp.asarray(rng.standard_normal((8, 128)), jnp.float32)
+    codes, scales = ops.kv_quant(x, bits=8, use_pallas=backend)
+    xr = ops.kv_dequant(codes, scales, bits=8, use_pallas=backend)
+    assert bool(jnp.abs(x - xr).max() < 0.05), "kv roundtrip drifted"
+
+
+def run(smoke: bool = False):
+    backend = "ref" if smoke else "interpret"
+    codec_roundtrip(backend)
     print("n,t_steps,width,irredundant_MB,overlapped_MB,saving,"
           "kernel_ok")
-    for n, t, w in [(1 << 16, 16, 512), (1 << 18, 64, 512),
-                    (1 << 18, 100, 128)]:
+    for n, t, w in (SMOKE_CASES if smoke else CASES):
         x = jnp.asarray(np.random.default_rng(0).standard_normal(n),
                         jnp.float32)
         y_ref = ref.jacobi_chunked_ref(x, t)
-        y_k = ops.jacobi1d_tiled(x, t, width=w, use_pallas="interpret")
+        y_k = ops.jacobi1d_tiled(x, t, width=w, use_pallas=backend)
         ok = bool(jnp.abs(y_ref - y_k).max() < 1e-4)
         ir, ov = traffic_model(n, t, w)
+        obs.counter_inc("kernels/halo_overhead_bytes", ov - ir,
+                        kernel="jacobi1d", n=n, t_steps=t, width=w)
         print(f"{n},{t},{w},{ir / 1e6:.2f},{ov / 1e6:.2f},"
               f"{ov / ir:.2f}x,{ok}")
         assert ok

@@ -13,9 +13,11 @@ Every run is reproducible and attributable:
   ``compression/ratio``, ... series the sections emitted, renderable with
   ``python -m repro.obs.report <out>``.
 
-``--smoke`` is the CI-safe mode: paper sections only (the jax-jit-heavy
-beyond-paper benches are skipped) with reduced case grids, a few seconds
-end to end.
+``--smoke`` is the CI-safe mode: every section runs with reduced case
+grids (the beyond-paper benches shrink their sweeps and use the jnp ``ref``
+kernel backend), a few seconds end to end — small enough for CI, complete
+enough that ``python -m repro.obs.regress`` can gate the kernels /
+collectives / ckpt series every PR.
 """
 import argparse
 import json
@@ -32,11 +34,13 @@ DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out")
 
 
 def sections(smoke: bool):
-    from benchmarks import (bench_collectives, bench_kvcache,
+    from benchmarks import (bench_ckpt, bench_collectives, bench_kvcache,
                             bench_stencil_kernel, fig10_transfer, fig11_ratio,
                             table1_mars, table2_compile)
 
-    secs = [
+    # every section runs in smoke mode too (reduced grids) so the
+    # regression gate sees kernels/collectives/ckpt series in CI
+    return [
         ("table1_mars", "Table 1 — MARS & burst counts", table1_mars.run),
         ("table2_compile", "Table 2 — layout + analysis time",
          table2_compile.run),
@@ -45,16 +49,14 @@ def sections(smoke: bool):
         ("fig11_ratio", "Fig 11 — compression ratio vs dtype x tile",
          lambda: fig11_ratio.run(smoke=smoke)),
         ("bench_kvcache", "Beyond-paper: packed KV cache", bench_kvcache.run),
+        ("bench_collectives", "Beyond-paper: compressed collectives",
+         lambda: bench_collectives.run(smoke=smoke)),
+        ("bench_stencil_kernel",
+         "Beyond-paper: irredundant stencil kernel",
+         lambda: bench_stencil_kernel.run(smoke=smoke)),
+        ("bench_ckpt", "Beyond-paper: checkpoint save/restore",
+         lambda: bench_ckpt.run(smoke=smoke)),
     ]
-    if not smoke:
-        secs += [
-            ("bench_collectives", "Beyond-paper: compressed collectives",
-             bench_collectives.run),
-            ("bench_stencil_kernel",
-             "Beyond-paper: irredundant stencil kernel",
-             bench_stencil_kernel.run),
-        ]
-    return secs
 
 
 def main(argv=None) -> None:

@@ -18,11 +18,14 @@ import dataclasses
 import json
 import os
 import shutil
+import time
 from typing import Any, Callable, List, Optional
 
 import jax
 import ml_dtypes
 import numpy as np
+
+from repro.obs import instrument as obs
 
 #: numpy can't serialize low-precision float dtypes; store raw-int views
 _VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
@@ -40,6 +43,14 @@ def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
     if dtype_name in _VIEW_AS:
         return arr.view(getattr(ml_dtypes, dtype_name))
     return arr
+
+
+def _n_shards(leaf) -> int:
+    """Addressable shards backing a leaf (1 for host arrays/scalars)."""
+    try:
+        return len(leaf.addressable_shards)
+    except (AttributeError, TypeError):
+        return 1
 
 
 def _tree_paths(tree) -> List[str]:
@@ -64,6 +75,10 @@ class CheckpointManager:
     def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> None:
         self.wait()
         leaves = jax.tree.leaves(tree)
+        if obs.enabled():
+            # shard accounting happens here, before device_get gathers
+            obs.counter_inc("ckpt/shards",
+                            sum(_n_shards(l) for l in leaves), op="save")
         host_leaves = jax.device_get(leaves)    # gather before async write
         paths = _tree_paths(tree)
         if self.async_save:
@@ -75,22 +90,32 @@ class CheckpointManager:
     def _write(self, step: int, leaves, paths, extra: dict) -> None:
         final = os.path.join(self.directory, f"step_{step:08d}")
         if os.path.exists(os.path.join(final, "manifest.json")):
+            obs.counter_inc("ckpt/save_skipped", 1)
             return  # this step is already durably published
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        manifest = {"step": step, "extra": extra, "leaves": []}
-        for i, (leaf, path) in enumerate(zip(leaves, paths)):
-            arr = np.asarray(leaf)
-            storable, dtype_name = _to_storable(arr)
-            np.save(os.path.join(tmp, f"leaf_{i}.npy"), storable)
-            manifest["leaves"].append(
-                {"path": path, "shape": list(arr.shape), "dtype": dtype_name})
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        os.replace(tmp, final)                  # atomic publish
-        self._gc()
+        t0 = time.perf_counter()
+        nbytes = 0
+        with obs.span("ckpt/save", step=step):
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            manifest = {"step": step, "extra": extra, "leaves": []}
+            for i, (leaf, path) in enumerate(zip(leaves, paths)):
+                arr = np.asarray(leaf)
+                storable, dtype_name = _to_storable(arr)
+                np.save(os.path.join(tmp, f"leaf_{i}.npy"), storable)
+                nbytes += storable.nbytes
+                manifest["leaves"].append(
+                    {"path": path, "shape": list(arr.shape),
+                     "dtype": dtype_name})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            os.replace(tmp, final)              # atomic publish
+            self._gc()
+        obs.hist_observe("ckpt/save_ms", (time.perf_counter() - t0) * 1e3)
+        obs.counter_inc("ckpt/saves", 1)
+        obs.counter_inc("ckpt/bytes_written", nbytes)
+        obs.counter_inc("ckpt/leaves", len(leaves), op="save")
 
     def wait(self) -> None:
         if self._pending is not None:
@@ -124,20 +149,32 @@ class CheckpointManager:
         sharding_fn(leaf_index, abstract_leaf) -> Sharding | None.
         Returns (tree, extra dict).
         """
-        d = os.path.join(self.directory, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        flat, treedef = jax.tree.flatten(like)
-        assert len(flat) == len(manifest["leaves"]), (
-            f"checkpoint has {len(manifest['leaves'])} leaves, "
-            f"expected {len(flat)}")
-        out = []
-        for i, ref in enumerate(flat):
-            want = manifest["leaves"][i]
-            arr = _from_storable(np.load(os.path.join(d, f"leaf_{i}.npy")),
-                                 want["dtype"])
-            assert list(arr.shape) == want["shape"]
-            sh = sharding_fn(i, ref) if sharding_fn else None
-            out.append(jax.device_put(arr, sh) if sh is not None
-                       else jax.device_put(arr))
-        return jax.tree.unflatten(treedef, out), manifest["extra"]
+        t0 = time.perf_counter()
+        nbytes = 0
+        with obs.span("ckpt/restore", step=step):
+            d = os.path.join(self.directory, f"step_{step:08d}")
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            flat, treedef = jax.tree.flatten(like)
+            assert len(flat) == len(manifest["leaves"]), (
+                f"checkpoint has {len(manifest['leaves'])} leaves, "
+                f"expected {len(flat)}")
+            out = []
+            for i, ref in enumerate(flat):
+                want = manifest["leaves"][i]
+                arr = _from_storable(
+                    np.load(os.path.join(d, f"leaf_{i}.npy")), want["dtype"])
+                assert list(arr.shape) == want["shape"]
+                nbytes += arr.nbytes
+                sh = sharding_fn(i, ref) if sharding_fn else None
+                out.append(jax.device_put(arr, sh) if sh is not None
+                           else jax.device_put(arr))
+            tree = jax.tree.unflatten(treedef, out)
+        obs.hist_observe("ckpt/restore_ms", (time.perf_counter() - t0) * 1e3)
+        obs.counter_inc("ckpt/restores", 1)
+        obs.counter_inc("ckpt/bytes_read", nbytes)
+        obs.counter_inc("ckpt/leaves", len(flat), op="restore")
+        if obs.enabled():
+            obs.counter_inc("ckpt/shards",
+                            sum(_n_shards(l) for l in out), op="restore")
+        return tree, manifest["extra"]

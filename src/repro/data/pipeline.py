@@ -10,6 +10,7 @@ tests assert the loss drops.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, Optional
 
 import jax
@@ -17,6 +18,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import model_zoo
+from repro.obs import instrument as obs
 
 
 def _hash2(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -56,6 +58,19 @@ class SyntheticPipeline:
         return toks.astype(np.int32)
 
     def next(self) -> Dict[str, Any]:
+        if not obs.enabled():
+            return self._next()
+        t0 = time.perf_counter()
+        batch = self._next()
+        obs.hist_observe("data/batch_ms", (time.perf_counter() - t0) * 1e3,
+                         arch=self.cfg.name)
+        obs.counter_inc("data/batches", 1, arch=self.cfg.name)
+        obs.counter_inc("data/bytes",
+                        sum(np.asarray(v).nbytes for v in batch.values()),
+                        arch=self.cfg.name)
+        return batch
+
+    def _next(self) -> Dict[str, Any]:
         cfg, rc = self.cfg, self.rc
         B, S = rc.global_batch, rc.seq_len
         if cfg.family == "vlm":

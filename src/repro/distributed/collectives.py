@@ -24,6 +24,7 @@ untouched.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Tuple
 
@@ -31,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import blockcodec as bc
+from repro.obs import instrument as obs
 
 F32 = jnp.float32
 BLOCK = 32                 # values per scale block (= one bitplane group)
@@ -112,3 +114,60 @@ def init_residuals(params) -> object:
 def compressed_bytes_per_param(bits: int, block: int = BLOCK) -> float:
     """Wire bytes per parameter for the compressed exchange."""
     return bits / 8 + 4.0 / block
+
+
+# ---------------------------------------------------------------------------
+# Wire-byte accounting (host side — the exchange itself runs traced)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeStats:
+    """Analytic per-exchange wire accounting for one gradient pytree.
+
+    ``quantize_tree``/``dequant_mean_tree`` execute inside traced SPMD
+    regions where obs must not record (PR-6 rule), so the byte accounting
+    is computed here from leaf shapes alone — exact, because the codec's
+    output sizes are static functions of shape and ``bits`` — and published
+    by the *caller* outside the jit boundary, once per exchange.
+    """
+    bits: int
+    compressed_leaves: int
+    raw_leaves: int
+    raw_bytes: int          # what an uncompressed f32 exchange would move
+    wire_bytes: int         # planes + scales, plus raw leaves verbatim
+
+    @property
+    def reduction(self) -> float:
+        return self.raw_bytes / self.wire_bytes if self.wire_bytes else 0.0
+
+    def publish(self, **labels) -> None:
+        """Emit ``collectives/*`` series (no-op when obs is disabled)."""
+        if not obs.enabled():
+            return
+        lb = dict(labels, bits=self.bits)
+        obs.counter_inc("collectives/exchanges", 1, **lb)
+        obs.counter_inc("collectives/raw_bytes", self.raw_bytes, **lb)
+        obs.counter_inc("collectives/wire_bytes", self.wire_bytes, **lb)
+        obs.counter_inc("collectives/leaves", self.compressed_leaves,
+                        kind="compressed", **lb)
+        obs.counter_inc("collectives/leaves", self.raw_leaves,
+                        kind="raw_fallback", **lb)
+        obs.gauge_set("collectives/reduction", self.reduction, **lb)
+
+
+def exchange_stats(tree, bits: int) -> ExchangeStats:
+    """Wire accounting for exchanging ``tree`` at ``bits`` (shapes only)."""
+    compressed = raw = 0
+    raw_bytes = wire_bytes = 0
+    for g in jax.tree.leaves(tree):
+        size = int(g.size)
+        raw_bytes += size * 4
+        if compressible(g):
+            compressed += 1
+            wire_bytes += size * bits // 8 + size // BLOCK * 4
+        else:
+            raw += 1
+            wire_bytes += size * 4
+    return ExchangeStats(bits=bits, compressed_leaves=compressed,
+                         raw_leaves=raw, raw_bytes=raw_bytes,
+                         wire_bytes=wire_bytes)

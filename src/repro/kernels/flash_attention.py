@@ -26,6 +26,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams (<=0.4.x) to CompilerParams; accept both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
 F32 = jnp.float32
 NEG_INF = -1e30
 
@@ -112,7 +116,7 @@ def _flash_fwd(q, k, v, *, causal: bool, window: int, bq: int, bk: int,
             pltpu.VMEM((bq,), F32),
             pltpu.VMEM((bq, D), F32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "parallel", "arbitrary")),
         interpret=interpret,
@@ -222,7 +226,7 @@ def _flash_bwd(res, g, *, causal, window, bq, bk, interpret):
             jax.ShapeDtypeStruct((B, Sk, KV, D), F32),
         ],
         scratch_shapes=[pltpu.VMEM((bk, D), F32), pltpu.VMEM((bk, D), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary", "arbitrary")),
         interpret=interpret,
@@ -246,7 +250,7 @@ def _flash_bwd(res, g, *, causal, window, bq, bk, interpret):
                                lambda b, h, g, qi, ki: (b, qi, h, g, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[pltpu.VMEM((bq, D), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "parallel", "arbitrary")),
         interpret=interpret,

@@ -4,6 +4,17 @@
 jnp oracle elsewhere (this CPU container validates kernels via
 interpret=True in tests; production traffic on CPU hosts shouldn't pay the
 interpreter cost).
+
+Every entry point is a *host-side* wrapper around the jitted kernel call,
+so it can publish per-kernel ``repro.obs`` series without recording inside
+a trace (the PR-6 rule): ``kernels/hbm_bytes{kernel=,dir=}`` and
+``kernels/beats{kernel=,dir=}`` are computed analytically from the operand
+shapes (what a roofline model charges the kernel: read every input once,
+write every output once), ``kernels/calls`` counts invocations, and a
+``kernels/<name>`` span brackets the dispatch.  When an entry point is
+reached *inside* someone else's trace (operands are tracers), recording is
+skipped entirely — trace-time counters would fire once per compile, not
+once per call.
 """
 from __future__ import annotations
 
@@ -12,7 +23,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.obs import instrument as obs
+
 from . import bitplane, jacobi_mars, kvpack, ref
+
+#: analytic HBM transaction beat, bytes (256-bit bus word) — the logical
+#: unit ``kernels/beats`` counts; deterministic, not a measured quantity
+BEAT_BYTES = 32
 
 
 def _on_tpu() -> bool:
@@ -29,6 +46,23 @@ def _mode(use_pallas: str | bool) -> str:
     return "ref"
 
 
+def _traced(*arrays) -> bool:
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def _record(kernel: str, mode: str, read_bytes: int, write_bytes: int,
+            **labels) -> None:
+    """Publish the analytic traffic of one kernel dispatch (host side)."""
+    if not obs.enabled():
+        return
+    obs.counter_inc("kernels/calls", 1, kernel=kernel, mode=mode, **labels)
+    for d, nbytes in (("read", read_bytes), ("write", write_bytes)):
+        obs.counter_inc("kernels/hbm_bytes", int(nbytes), kernel=kernel,
+                        mode=mode, dir=d, **labels)
+        obs.counter_inc("kernels/beats", -(-int(nbytes) // BEAT_BYTES),
+                        kernel=kernel, mode=mode, dir=d, **labels)
+
+
 # ---------------------------------------------------------------------------
 # delta+bitplane codec
 # ---------------------------------------------------------------------------
@@ -37,18 +71,34 @@ def pack_codes(q: jax.Array, bits: int, use_pallas: str | bool = "auto") -> jax.
     """int32 codes [N, block] -> uint32 planes [N, block//32*bits]."""
     n, block = q.shape
     m = _mode(use_pallas)
-    if m == "ref":
-        return ref.pack_ref(q, bits)
-    return bitplane.pack(q, bits=bits, block=block, interpret=(m == "interpret"))
+    record = not _traced(q)
+    with obs.span("kernels/pack", mode=m, bits=bits):
+        if m == "ref":
+            out = ref.pack_ref(q, bits)
+        else:
+            out = bitplane.pack(q, bits=bits, block=block,
+                                interpret=(m == "interpret"))
+    if record:
+        _record("pack", m, n * block * 4, n * (block // 32 * bits) * 4,
+                bits=bits)
+    return out
 
 
 def unpack_codes(planes: jax.Array, bits: int, block: int,
                  use_pallas: str | bool = "auto") -> jax.Array:
     m = _mode(use_pallas)
-    if m == "ref":
-        return ref.unpack_ref(planes, bits, block)
-    return bitplane.unpack(planes, bits=bits, block=block,
-                           interpret=(m == "interpret"))
+    record = not _traced(planes)
+    with obs.span("kernels/unpack", mode=m, bits=bits):
+        if m == "ref":
+            out = ref.unpack_ref(planes, bits, block)
+        else:
+            out = bitplane.unpack(planes, bits=bits, block=block,
+                                  interpret=(m == "interpret"))
+    if record:
+        n = planes.shape[0]
+        _record("unpack", m, n * (block // 32 * bits) * 4, n * block * 4,
+                bits=bits)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -57,18 +107,36 @@ def unpack_codes(planes: jax.Array, bits: int, block: int,
 
 def kv_quant(x: jax.Array, bits: int = 8, use_pallas: str | bool = "auto"):
     m = _mode(use_pallas)
-    if m == "ref":
-        return ref.kv_quant_ref(x, bits)
-    return kvpack.kv_quant(x, bits=bits, interpret=(m == "interpret"))
+    record = not _traced(x)
+    with obs.span("kernels/kv_quant", mode=m, bits=bits):
+        if m == "ref":
+            out = ref.kv_quant_ref(x, bits)
+        else:
+            out = kvpack.kv_quant(x, bits=bits, interpret=(m == "interpret"))
+    if record:
+        rows, d = x.shape
+        cd = d if bits == 8 else d // 2
+        _record("kv_quant", m, rows * d * x.dtype.itemsize,
+                rows * cd + rows * 4, bits=bits)
+    return out
 
 
 def kv_dequant(codes: jax.Array, scales: jax.Array, bits: int = 8,
                use_pallas: str | bool = "auto") -> jax.Array:
     m = _mode(use_pallas)
-    if m == "ref":
-        return ref.kv_dequant_ref(codes, scales, bits)
-    return kvpack.kv_dequant(codes, scales, bits=bits,
-                             interpret=(m == "interpret"))
+    record = not _traced(codes, scales)
+    with obs.span("kernels/kv_dequant", mode=m, bits=bits):
+        if m == "ref":
+            out = ref.kv_dequant_ref(codes, scales, bits)
+        else:
+            out = kvpack.kv_dequant(codes, scales, bits=bits,
+                                    interpret=(m == "interpret"))
+    if record:
+        _record("kv_dequant", m,
+                codes.size * codes.dtype.itemsize
+                + scales.size * scales.dtype.itemsize,
+                out.size * out.dtype.itemsize, bits=bits)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -76,17 +144,8 @@ def kv_dequant(codes: jax.Array, scales: jax.Array, bits: int = 8,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("t_steps", "width", "use_pallas"))
-def jacobi1d_tiled(x: jax.Array, t_steps: int, width: int = 512,
-                   use_pallas: str | bool = "auto") -> jax.Array:
-    """T jacobi steps (edge-padded open-boundary contract), chunked execution.
-
-    The kernel runs over a padded domain: one full ghost chunk of x[0] on the
-    left (so the first real chunk's carry is exact — the frozen far-left
-    carry sits > width-T cells from any real cell) and edge padding on the
-    right (the paper's 'partial tiles on host' become constant ghost regions
-    here).  Kernel output block c holds cells [cW - T, (c+1)W - T) of the
-    padded domain; real cell m lives at ybuf[m + width + T].
-    """
+def _jacobi1d_tiled_jit(x: jax.Array, t_steps: int, width: int,
+                        use_pallas: str | bool) -> jax.Array:
     m = _mode(use_pallas)
     if m == "ref":
         return ref.jacobi_chunked_ref(x, t_steps)
@@ -101,3 +160,29 @@ def jacobi1d_tiled(x: jax.Array, t_steps: int, width: int = 512,
     ybuf = jacobi_mars.jacobi_chunked(xp, t_steps=t_steps, width=width,
                                       interpret=(m == "interpret"))
     return jax.lax.dynamic_slice(ybuf, (width + t_steps,), (n,))
+
+
+def jacobi1d_tiled(x: jax.Array, t_steps: int, width: int = 512,
+                   use_pallas: str | bool = "auto") -> jax.Array:
+    """T jacobi steps (edge-padded open-boundary contract), chunked execution.
+
+    The kernel runs over a padded domain: one full ghost chunk of x[0] on the
+    left (so the first real chunk's carry is exact — the frozen far-left
+    carry sits > width-T cells from any real cell) and edge padding on the
+    right (the paper's 'partial tiles on host' become constant ghost regions
+    here).  Kernel output block c holds cells [cW - T, (c+1)W - T) of the
+    padded domain; real cell m lives at ybuf[m + width + T].
+
+    HBM accounting charges the irredundant scheme: each cell is read once
+    and written once per pass regardless of T, the carry riding in VMEM
+    scratch (vs overlapped tiling's T-wide halo re-reads — see
+    benchmarks/bench_stencil_kernel.py for the comparison model).
+    """
+    m = _mode(use_pallas)
+    record = not _traced(x)
+    with obs.span("kernels/jacobi1d", mode=m, t_steps=t_steps, width=width):
+        out = _jacobi1d_tiled_jit(x, t_steps, width, use_pallas)
+    if record:
+        n = x.shape[0]
+        _record("jacobi1d", m, n * 4, n * 4, t_steps=t_steps)
+    return out

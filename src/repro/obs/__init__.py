@@ -20,6 +20,9 @@ Disabled (the default unless ``REPRO_OBS=1``), every helper is a single
 flag test — see ``instrument`` for the zero-overhead contract and the rule
 about never recording inside ``jax.jit``-traced code.
 """
+# NOTE: ``regress`` is deliberately not imported here — it is a ``-m``
+# entry point (importing it from the package __init__ would make runpy
+# warn about double execution); use ``from repro.obs import regress``.
 from . import instrument, metrics, sink, trace
 from .instrument import (counter_inc, disable, enable, enabled,
                          enabled_scope, gauge_set, hist_observe,

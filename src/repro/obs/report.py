@@ -10,12 +10,18 @@ Reads the ``BENCH_obs.json`` written by ``benchmarks/run.py`` (or any
 * every remaining counter / gauge / histogram series;
 * a span rollup (count, wall-clock total, logical-cycle total per name).
 
+Sections a run did not exercise render as ``n/a`` placeholders rather than
+raising — a smoke run without the beyond-paper benches must still report.
+``--format=json`` emits the :func:`repro.obs.regress.flatten_series` view
+instead, so the regression gate and humans read the same numbers.
+
 Formatting reuses the markdown-table and duration helpers from
 ``repro.launch.report`` so EXPERIMENTS.md-style docs stay consistent.
 """
 from __future__ import annotations
 
 import argparse
+import json
 from collections import defaultdict
 from typing import Dict, Tuple
 
@@ -24,15 +30,19 @@ from repro.launch.report import fmt_s, md_table
 from repro.core.transfer import MODES as TRANSFER_PATTERNS
 
 from .metrics import parse_series_key
+from .regress import flatten_series
 from .sink import read_summary
 
 
 def _fmt_val(v) -> str:
     if v is None:
-        return "-"
+        return "n/a"
     if isinstance(v, float) and not v.is_integer():
         return f"{v:.4g}"
-    return str(int(v))
+    try:
+        return str(int(v))
+    except (TypeError, ValueError):
+        return str(v)
 
 
 def transfer_cycles_table(counters: Dict[str, float]) -> str:
@@ -46,7 +56,7 @@ def transfer_cycles_table(counters: Dict[str, float]) -> str:
                labels.get("dtype", "?"))
         cells[row][labels.get("pattern", "?")] = v
     if not cells:
-        return "(no transfer/cycles counters in this run)"
+        return "(n/a — no transfer/cycles counters in this run)"
     rows = []
     for (bench, tile, dtype), by_pat in sorted(cells.items()):
         rows.append((bench, tile, dtype,
@@ -59,40 +69,41 @@ def histogram_table(histograms: Dict[str, dict], prefix: str = "") -> str:
     for key, h in sorted(histograms.items()):
         if not key.startswith(prefix):
             continue
-        rows.append((key, h["count"], _fmt_val(h["min"]),
-                     _fmt_val(h["mean"]), _fmt_val(h["max"]),
-                     _fmt_val(h["sum"])))
+        h = h or {}
+        rows.append((key, _fmt_val(h.get("count")), _fmt_val(h.get("min")),
+                     _fmt_val(h.get("mean")), _fmt_val(h.get("max")),
+                     _fmt_val(h.get("sum"))))
     if not rows:
-        return f"(no {prefix or 'histogram'}* series in this run)"
+        return f"(n/a — no {prefix or 'histogram'}* series in this run)"
     return md_table(("series", "count", "min", "mean", "max", "sum"), rows)
 
 
 def scalar_table(series: Dict[str, float], kind: str) -> str:
     rows = [(k, _fmt_val(v)) for k, v in sorted(series.items())]
     if not rows:
-        return f"(no {kind}s in this run)"
+        return f"(n/a — no {kind}s in this run)"
     return md_table(("series", "value"), rows)
 
 
 def span_table(spans) -> str:
     agg: Dict[str, list] = defaultdict(lambda: [0, 0.0, 0])
-    for s in spans:
-        a = agg[s["name"]]
+    for s in spans or []:
+        a = agg[s.get("name", "?")]
         a[0] += 1
-        a[1] += s["dur_us"]
-        a[2] += s.get("cycles", 0)
+        a[1] += s.get("dur_us", 0.0) or 0.0
+        a[2] += s.get("cycles", 0) or 0
     if not agg:
-        return "(no spans in this run)"
+        return "(n/a — no spans in this run)"
     rows = [(name, n, fmt_s(us / 1e6), _fmt_val(cyc))
             for name, (n, us, cyc) in sorted(agg.items())]
     return md_table(("span", "count", "wall total", "cycles total"), rows)
 
 
 def render(doc: dict) -> str:
-    meta = doc.get("meta", {})
-    m = doc.get("metrics", {})
-    counters = m.get("counters", {})
-    histograms = m.get("histograms", {})
+    meta = doc.get("meta", {}) or {}
+    m = doc.get("metrics", {}) or {}
+    counters = m.get("counters", {}) or {}
+    histograms = m.get("histograms", {}) or {}
     out = []
     stamp = ", ".join(f"{k}={v}" for k, v in sorted(meta.items())
                       if k in ("git_sha", "config", "seed", "smoke")
@@ -105,7 +116,7 @@ def render(doc: dict) -> str:
     out.append("\n## Counters\n")
     out.append(scalar_table(counters, "counter"))
     out.append("\n## Gauges\n")
-    out.append(scalar_table(m.get("gauges", {}), "gauge"))
+    out.append(scalar_table(m.get("gauges", {}) or {}, "gauge"))
     out.append("\n## Other histograms\n")
     out.append(histogram_table(
         {k: v for k, v in histograms.items()
@@ -119,13 +130,21 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="Render BENCH_obs.json metrics as markdown tables.")
     ap.add_argument("path", help="run output dir (or sidecar file) to report")
+    ap.add_argument("--format", choices=("md", "json"), default="md",
+                    help="json prints the flat series view the regression "
+                         "gate compares (repro.obs.regress.flatten_series)")
     args = ap.parse_args(argv)
     try:
         doc = read_summary(args.path)
     except FileNotFoundError as e:
         ap.error(f"no obs sidecar at {e.filename!r} — run "
                  "`python -m benchmarks.run --smoke --out <dir>` first")
-    print(render(doc))
+    if args.format == "json":
+        print(json.dumps({"meta": doc.get("meta", {}) or {},
+                          "series": flatten_series(doc)},
+                         indent=1, sort_keys=True))
+    else:
+        print(render(doc))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,361 @@
+"""Regression gate (`repro.obs.regress`) + the PR-7 subsystem counters.
+
+Two halves:
+
+* gate semantics over fixture sidecar pairs — identical runs pass, an
+  injected ``transfer/cycles`` inflation fails, in-tolerance wall-clock
+  drift passes, series missing from the baseline warn instead of failing;
+* the new ``kernels/`` / ``collectives/`` / ``ckpt/`` / ``data/``
+  instrumentation records analytically-expected values on small inputs.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import obs
+from repro.obs import regress
+from repro.obs.regress import Delta, compare, flatten_series
+
+
+# ---------------------------------------------------------------------------
+# fixture sidecars
+# ---------------------------------------------------------------------------
+
+def _sidecar(tmp_path, name, mutate=None):
+    """Write a small but representative sidecar; mutate(doc) edits it."""
+    with obs.enabled_scope() as (reg, tr):
+        for pat, cyc in [("minimal", 700), ("bbox", 300), ("mars", 200),
+                         ("mars_pack", 150), ("mars_comp", 100)]:
+            obs.counter_inc("transfer/cycles", cyc, pattern=pat,
+                            bench="jacobi-1d", tile="6x6", dtype="fixed18")
+        obs.counter_inc("kernels/hbm_bytes", 4096, kernel="pack", dir="read")
+        obs.counter_inc("collectives/wire_bytes", 9216, bits=8)
+        obs.hist_observe("compression/ratio", 5.0, dtype="fixed18")
+        obs.hist_observe("ckpt/save_ms", 10.0)
+        obs.gauge_set("train/loss", 3.0, arch="t")
+        path = obs.write_sidecar(str(tmp_path / name), reg, tr,
+                                 meta={"config": "fixture"})
+    if mutate is not None:
+        doc = json.load(open(path))
+        mutate(doc)
+        json.dump(doc, open(path, "w"))
+    return str(tmp_path / name)
+
+
+def test_gate_passes_on_identical_runs(tmp_path, capsys):
+    base = _sidecar(tmp_path, "base")
+    run = _sidecar(tmp_path, "run")
+    assert regress.main([run, "--baseline", base]) == 0
+    assert "0 regression(s)" in capsys.readouterr().out
+
+
+def test_gate_fails_on_inflated_transfer_cycles(tmp_path, capsys):
+    base = _sidecar(tmp_path, "base")
+
+    def inflate(doc):
+        c = doc["metrics"]["counters"]
+        k = next(k for k in c if k.startswith("transfer/cycles")
+                 and "mars_comp" in k)
+        c[k] = c[k] * 2
+
+    run = _sidecar(tmp_path, "run", mutate=inflate)
+    assert regress.main([run, "--baseline", base]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out and "mars_comp" in out
+
+
+def test_gate_fails_on_compression_ratio_drop(tmp_path):
+    base = _sidecar(tmp_path, "base")
+
+    def drop(doc):
+        h = doc["metrics"]["histograms"]
+        k = next(k for k in h if k.startswith("compression/ratio"))
+        h[k]["mean"] = h[k]["mean"] * 0.5  # ratio is higher-better
+
+    run = _sidecar(tmp_path, "run", mutate=drop)
+    assert regress.main([run, "--baseline", base]) == 1
+
+
+def test_wall_clock_drift_within_band_passes(tmp_path):
+    base = _sidecar(tmp_path, "base")
+
+    def slower(doc):
+        doc["metrics"]["histograms"]["ckpt/save_ms"]["mean"] = 25.0  # 2.5x
+
+    run = _sidecar(tmp_path, "run", mutate=slower)
+    assert regress.main([run, "--baseline", base]) == 0
+    # but beyond the band it fails
+    assert regress.main([run, "--baseline", base, "--wall-tol", "0.5"]) == 1
+
+
+def test_missing_baseline_series_warns_not_fails(tmp_path, capsys):
+    base = _sidecar(tmp_path, "base")
+
+    def extra(doc):
+        doc["metrics"]["counters"]["kernels/hbm_bytes{kernel=new}"] = 1
+
+    run = _sidecar(tmp_path, "run", mutate=extra)
+    assert regress.main([run, "--baseline", base]) == 0
+    out = capsys.readouterr().out
+    assert "1 new" in out and "no baseline series" in out
+
+
+def test_series_vanished_from_run_warns_not_fails(tmp_path, capsys):
+    def extra(doc):
+        doc["metrics"]["counters"]["kernels/hbm_bytes{kernel=old}"] = 7
+
+    base = _sidecar(tmp_path, "base", mutate=extra)
+    run = _sidecar(tmp_path, "run")
+    assert regress.main([run, "--baseline", base]) == 0
+    assert "1 missing" in capsys.readouterr().out
+
+
+def test_gate_json_format(tmp_path, capsys):
+    base = _sidecar(tmp_path, "base")
+    run = _sidecar(tmp_path, "run")
+    assert regress.main([run, "--baseline", base, "--format", "json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["exit_code"] == 0 and doc["stats"]["regressions"] == 0
+    assert any(d["key"].startswith("transfer/cycles") for d in doc["deltas"])
+
+
+def test_improvement_reports_but_passes(tmp_path, capsys):
+    base = _sidecar(tmp_path, "base")
+
+    def faster(doc):
+        c = doc["metrics"]["counters"]
+        k = next(k for k in c if k.startswith("transfer/cycles"))
+        c[k] = c[k] // 2
+
+    run = _sidecar(tmp_path, "run", mutate=faster)
+    assert regress.main([run, "--baseline", base]) == 0
+    out = capsys.readouterr().out
+    assert "improved" in out and "refresh" in out
+
+
+def test_compare_policy_unit():
+    base = {"transfer/cycles{p=a}": {"kind": "counter", "value": 100},
+            "misc/thing": {"kind": "counter", "value": 5}}
+    cur = {"transfer/cycles{p=a}": {"kind": "counter", "value": 100},
+           "misc/thing": {"kind": "counter", "value": 50}}
+    by_key = {d.key: d for d in compare(base, cur)}
+    assert by_key["transfer/cycles{p=a}"].status == "ok"
+    # untracked series never fail, however wild the swing
+    assert by_key["misc/thing"].status == "untracked"
+    assert not any(d.failed for d in by_key.values())
+
+
+# ---------------------------------------------------------------------------
+# kernels/ instrumentation
+# ---------------------------------------------------------------------------
+
+def test_kernel_codec_counters_expected_values():
+    from repro.kernels import ops
+    q = jnp.asarray(np.arange(8 * 128).reshape(8, 128) % 50, jnp.int32)
+    with obs.enabled_scope() as (reg, tr):
+        planes = ops.pack_codes(q, 8, use_pallas="ref")
+        q2 = ops.unpack_codes(planes, 8, 128, use_pallas="ref")
+    assert bool((q == q2).all())
+    lb = dict(kernel="pack", mode="ref", bits=8)
+    assert reg.counter_value("kernels/hbm_bytes", dir="read",
+                             **lb) == 8 * 128 * 4
+    assert reg.counter_value("kernels/hbm_bytes", dir="write",
+                             **lb) == 8 * (128 // 32 * 8) * 4
+    assert reg.counter_value("kernels/beats", dir="read",
+                             **lb) == 8 * 128 * 4 // ops.BEAT_BYTES
+    ulb = dict(kernel="unpack", mode="ref", bits=8)
+    assert reg.counter_value("kernels/hbm_bytes", dir="read", **ulb) == 1024
+    assert reg.counter_value("kernels/hbm_bytes", dir="write", **ulb) == 4096
+    assert reg.counter_value("kernels/calls", **lb) == 1
+    names = [r.name for r in tr.records]
+    assert "kernels/pack" in names and "kernels/unpack" in names
+
+
+def test_kernel_kv_counters_expected_values():
+    from repro.kernels import ops
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 128)),
+                    jnp.float32)
+    with obs.enabled_scope() as (reg, _):
+        codes, scales = ops.kv_quant(x, bits=8, use_pallas="ref")
+        ops.kv_dequant(codes, scales, bits=8, use_pallas="ref")
+    qlb = dict(kernel="kv_quant", mode="ref", bits=8)
+    assert reg.counter_value("kernels/hbm_bytes", dir="read",
+                             **qlb) == 8 * 128 * 4
+    assert reg.counter_value("kernels/hbm_bytes", dir="write",
+                             **qlb) == 8 * 128 + 8 * 4
+    dlb = dict(kernel="kv_dequant", mode="ref", bits=8)
+    assert reg.counter_value("kernels/hbm_bytes", dir="read",
+                             **dlb) == 8 * 128 + 8 * 4
+    assert reg.counter_value("kernels/hbm_bytes", dir="write",
+                             **dlb) == 8 * 128 * 4
+
+
+def test_kernel_jacobi_counters_and_disabled_noop():
+    from repro.kernels import ops
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(512),
+                    jnp.float32)
+    with obs.enabled_scope() as (reg, _):
+        ops.jacobi1d_tiled(x, 4, width=256, use_pallas="ref")
+    lb = dict(kernel="jacobi1d", mode="ref", t_steps=4)
+    assert reg.counter_value("kernels/hbm_bytes", dir="read",
+                             **lb) == 512 * 4
+    assert reg.counter_value("kernels/hbm_bytes", dir="write",
+                             **lb) == 512 * 4
+    obs.disable()
+    ops.jacobi1d_tiled(x, 4, width=256, use_pallas="ref")
+    assert obs.instrument.registry().counter_value(
+        "kernels/hbm_bytes", dir="read", **lb) == 0
+
+
+# ---------------------------------------------------------------------------
+# collectives/ instrumentation
+# ---------------------------------------------------------------------------
+
+def test_exchange_stats_expected_bytes():
+    from repro.distributed import collectives as C
+    tree = {"w": jnp.zeros((64, 128), jnp.float32),
+            "b": jnp.zeros(7, jnp.float32)}
+    st = C.exchange_stats(tree, bits=8)
+    assert st.compressed_leaves == 1 and st.raw_leaves == 1
+    assert st.raw_bytes == 64 * 128 * 4 + 7 * 4
+    # planes: size*bits/8; scales: one f32 per 32-block; raw leaf verbatim
+    assert st.wire_bytes == 64 * 128 + 64 * 128 // 32 * 4 + 7 * 4
+    assert st.reduction == pytest.approx(st.raw_bytes / st.wire_bytes)
+    with obs.enabled_scope() as (reg, _):
+        st.publish(n=8192)
+    assert reg.counter_value("collectives/wire_bytes", bits=8,
+                             n=8192) == st.wire_bytes
+    assert reg.counter_value("collectives/raw_bytes", bits=8,
+                             n=8192) == st.raw_bytes
+    assert reg.counter_value("collectives/leaves", kind="raw_fallback",
+                             bits=8, n=8192) == 1
+    assert reg.counter_value("collectives/leaves", kind="compressed",
+                             bits=8, n=8192) == 1
+
+
+def test_exchange_stats_matches_wire_model():
+    from repro.distributed import collectives as C
+    n = 1 << 14
+    tree = {"w": jnp.zeros((n // 128, 128), jnp.float32)}
+    for bits in (4, 8):
+        st = C.exchange_stats(tree, bits)
+        assert st.wire_bytes == pytest.approx(
+            n * C.compressed_bytes_per_param(bits))
+
+
+# ---------------------------------------------------------------------------
+# ckpt/ instrumentation
+# ---------------------------------------------------------------------------
+
+def test_ckpt_counters_on_save_restore(tmp_path):
+    from repro.checkpoint.ckpt import CheckpointManager
+    tree = {"a": np.arange(6, dtype=np.float32),
+            "b": np.ones((2, 3), np.float32)}
+    nbytes = 6 * 4 + 6 * 4
+    with obs.enabled_scope() as (reg, tr):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(3, tree, extra={"k": 1})
+        restored, extra = mgr.restore(3, tree)
+    assert extra == {"k": 1}
+    assert np.array_equal(restored["a"], tree["a"])
+    assert reg.counter_value("ckpt/saves") == 1
+    assert reg.counter_value("ckpt/restores") == 1
+    assert reg.counter_value("ckpt/bytes_written") == nbytes
+    assert reg.counter_value("ckpt/bytes_read") == nbytes
+    assert reg.counter_value("ckpt/leaves", op="save") == 2
+    assert reg.counter_value("ckpt/leaves", op="restore") == 2
+    assert reg.counter_value("ckpt/shards", op="save") >= 2
+    snap = reg.snapshot().to_dict()
+    assert snap["histograms"]["ckpt/save_ms"]["count"] == 1
+    assert snap["histograms"]["ckpt/restore_ms"]["count"] == 1
+    names = [r.name for r in tr.records]
+    assert "ckpt/save" in names and "ckpt/restore" in names
+
+
+def test_ckpt_async_save_records_after_wait(tmp_path):
+    from repro.checkpoint.ckpt import CheckpointManager
+    tree = {"a": np.zeros(4, np.float32)}
+    with obs.enabled_scope() as (reg, _):
+        mgr = CheckpointManager(str(tmp_path), async_save=True)
+        mgr.save(1, tree)
+        mgr.wait()
+        assert reg.counter_value("ckpt/saves") == 1
+        assert reg.counter_value("ckpt/bytes_written") == 16
+
+
+# ---------------------------------------------------------------------------
+# data/ instrumentation
+# ---------------------------------------------------------------------------
+
+def test_pipeline_counters():
+    from repro.configs import base
+    from repro.data.pipeline import SyntheticPipeline
+    cfg = base.load_smoke("tinyllama-1.1b")
+    rc = base.RunConfig(seq_len=32, global_batch=4, kind="train")
+    with obs.enabled_scope() as (reg, _):
+        p = SyntheticPipeline(cfg, rc, seed=0)
+        b = p.next()
+        p.next()
+    want = sum(np.asarray(v).nbytes for v in b.values())
+    assert reg.counter_value("data/batches", arch=cfg.name) == 2
+    assert reg.counter_value("data/bytes", arch=cfg.name) == 2 * want
+    snap = reg.snapshot().to_dict()
+    key = f"data/batch_ms{{arch={cfg.name}}}"
+    assert snap["histograms"][key]["count"] == 2
+
+
+def test_pipeline_stream_identical_with_obs_off_and_on():
+    from repro.configs import base
+    from repro.data.pipeline import SyntheticPipeline
+    cfg = base.load_smoke("tinyllama-1.1b")
+    rc = base.RunConfig(seq_len=16, global_batch=2, kind="train")
+    obs.disable()
+    off = SyntheticPipeline(cfg, rc, seed=3).next()
+    with obs.enabled_scope():
+        on = SyntheticPipeline(cfg, rc, seed=3).next()
+    assert np.array_equal(off["tokens"], on["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# report hardening + shared json view
+# ---------------------------------------------------------------------------
+
+def test_report_renders_na_for_empty_run(tmp_path, capsys):
+    from repro.obs import report
+    with obs.enabled_scope() as (reg, tr):
+        obs.write_sidecar(str(tmp_path), reg, tr, meta={})
+    report.main([str(tmp_path)])
+    out = capsys.readouterr().out
+    assert "n/a — no transfer/cycles" in out
+    assert "n/a — no spans" in out
+
+
+def test_report_tolerates_partial_histograms(tmp_path, capsys):
+    from repro.obs import report
+    doc = {"meta": {}, "metrics": {"counters": {},
+                                   "histograms": {"weird/h": {}}},
+           "spans": [{"name": "s"}]}
+    p = tmp_path / "BENCH_obs.json"
+    p.write_text(json.dumps(doc))
+    report.main([str(p)])
+    out = capsys.readouterr().out
+    assert "weird/h" in out and "n/a" in out
+
+
+def test_report_json_matches_gate_view(tmp_path, capsys):
+    from repro.obs import report
+    with obs.enabled_scope() as (reg, tr):
+        obs.counter_inc("transfer/cycles", 42, pattern="mars_comp")
+        obs.hist_observe("ckpt/save_ms", 7.0)
+        obs.write_sidecar(str(tmp_path), reg, tr, meta={"config": "t"})
+    report.main([str(tmp_path), "--format=json"])
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["series"]["transfer/cycles{pattern=mars_comp}"] == \
+        {"kind": "counter", "value": 42}
+    assert doc["series"]["ckpt/save_ms"]["value"] == 7.0
+    # same numbers the gate compares
+    sidecar = json.load(open(tmp_path / "BENCH_obs.json"))
+    assert doc["series"] == flatten_series(sidecar)
