@@ -133,8 +133,7 @@ class RunConfig:
     # §Perf: hand-scheduled reduce-scatter TP out-projections (shard_map)
     # instead of SPMD-chosen all-reduce+all-gather pairs
     tp_scatter: bool = False
-    # vocab-dim sharding of embed/unembed (off: works around an XLA SPMD
-    # partitioner abort on gather inside manual-pod shard_map regions)
+    # vocab-dim sharding of embed/unembed
     shard_vocab: bool = True
     # paper-technique features
     grad_compress_bits: int = 0    # 0 = off; 8 = cross-pod compressed grads

@@ -171,8 +171,9 @@ def tp_out_proj(h: jax.Array, w: jax.Array) -> Optional[jax.Array]:
             out = jax.lax.psum(partial, "model")
         return out.astype(hl.dtype)
 
+    from repro.distributed.collectives import shard_map
     out_spec = P(None, "model", None) if scatter else P(None, None, None)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, axis_names=frozenset({"model"}),
         in_specs=(P(None, None, "model"), P("model", None)),
         out_specs=out_spec, check_vma=False,

@@ -32,6 +32,41 @@ from . import bitplane, jacobi_mars, kvpack, ref
 BEAT_BYTES = 32
 
 
+# ---------------------------------------------------------------------------
+# Analytic I/O models (read every input once, write every output once) —
+# shared by the ``_record`` instrumentation below and by
+# ``repro.launch.audit``, which cross-checks them against the entry
+# parameter/result bytes of the compiled HLO.
+# ---------------------------------------------------------------------------
+
+def pack_io_bytes(n: int, block: int, bits: int):
+    """(read, write) bytes for pack_codes: s32 codes -> u32 bitplanes."""
+    return n * block * 4, n * (block // 32 * bits) * 4
+
+
+def unpack_io_bytes(n: int, block: int, bits: int):
+    """(read, write) bytes for unpack_codes (pack's mirror)."""
+    w, r = pack_io_bytes(n, block, bits)
+    return r, w
+
+
+def kv_quant_io_bytes(rows: int, d: int, bits: int, itemsize: int = 4):
+    """(read, write) bytes for kv_quant: x -> (packed codes, f32 scales)."""
+    cd = d if bits == 8 else d // 2
+    return rows * d * itemsize, rows * cd + rows * 4
+
+
+def kv_dequant_io_bytes(rows: int, d: int, bits: int):
+    """(read, write) bytes for kv_dequant: (codes, scales) -> f32 values."""
+    r, w = kv_quant_io_bytes(rows, d, bits)
+    return w, rows * d * 4
+
+
+def jacobi_io_bytes(n: int):
+    """(read, write) bytes for jacobi1d: each f32 cell read/written once."""
+    return n * 4, n * 4
+
+
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
@@ -79,8 +114,7 @@ def pack_codes(q: jax.Array, bits: int, use_pallas: str | bool = "auto") -> jax.
             out = bitplane.pack(q, bits=bits, block=block,
                                 interpret=(m == "interpret"))
     if record:
-        _record("pack", m, n * block * 4, n * (block // 32 * bits) * 4,
-                bits=bits)
+        _record("pack", m, *pack_io_bytes(n, block, bits), bits=bits)
     return out
 
 
@@ -96,8 +130,7 @@ def unpack_codes(planes: jax.Array, bits: int, block: int,
                                   interpret=(m == "interpret"))
     if record:
         n = planes.shape[0]
-        _record("unpack", m, n * (block // 32 * bits) * 4, n * block * 4,
-                bits=bits)
+        _record("unpack", m, *unpack_io_bytes(n, block, bits), bits=bits)
     return out
 
 
@@ -115,9 +148,9 @@ def kv_quant(x: jax.Array, bits: int = 8, use_pallas: str | bool = "auto"):
             out = kvpack.kv_quant(x, bits=bits, interpret=(m == "interpret"))
     if record:
         rows, d = x.shape
-        cd = d if bits == 8 else d // 2
-        _record("kv_quant", m, rows * d * x.dtype.itemsize,
-                rows * cd + rows * 4, bits=bits)
+        _record("kv_quant", m,
+                *kv_quant_io_bytes(rows, d, bits, x.dtype.itemsize),
+                bits=bits)
     return out
 
 
@@ -133,9 +166,8 @@ def kv_dequant(codes: jax.Array, scales: jax.Array, bits: int = 8,
                                     interpret=(m == "interpret"))
     if record:
         _record("kv_dequant", m,
-                codes.size * codes.dtype.itemsize
-                + scales.size * scales.dtype.itemsize,
-                out.size * out.dtype.itemsize, bits=bits)
+                *kv_dequant_io_bytes(codes.shape[0], out.shape[-1], bits),
+                bits=bits)
     return out
 
 
@@ -184,5 +216,5 @@ def jacobi1d_tiled(x: jax.Array, t_steps: int, width: int = 512,
         out = _jacobi1d_tiled_jit(x, t_steps, width, use_pallas)
     if record:
         n = x.shape[0]
-        _record("jacobi1d", m, n * 4, n * 4, t_steps=t_steps)
+        _record("jacobi1d", m, *jacobi_io_bytes(n), t_steps=t_steps)
     return out

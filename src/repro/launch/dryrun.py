@@ -106,7 +106,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, overrides=None) -> dict:
 
         # --- analyses -----------------------------------------------------
         # raw XLA numbers (while bodies counted ONCE — kept for reference)
-        ca = compiled.cost_analysis() or {}
+        from repro.launch import hlo_walk
+        ca = hlo_walk.cost_analysis_dict(compiled)
         rec["xla_flops_raw"] = float(ca.get("flops", 0.0))
         rec["xla_bytes_raw"] = float(ca.get("bytes accessed", 0.0))
 

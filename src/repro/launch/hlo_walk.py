@@ -96,6 +96,99 @@ class Instr:
     result_text: str
     op: str
     rhs: str
+    root: bool = False
+
+
+@dataclasses.dataclass
+class CollectiveDetail:
+    """One collective instruction, execution-count and replica-group aware.
+
+    ``wire_bytes`` is the per-device ring-schedule wire volume over all
+    executions: with group size g, an all-gather/reduce-scatter/all-to-all
+    of a B-byte full buffer moves (g-1)/g * B per device, an all-reduce
+    moves 2*(g-1)/g * B (reduce-scatter + all-gather phases), and a
+    collective-permute moves B point-to-point.  ``group_size == 0`` means
+    the group could not be determined (no replica_groups annotation and no
+    num_partitions header) and the asymptotic g -> inf factor is used.
+    """
+    op: str
+    name: str
+    dtype: str
+    group_size: int
+    n_groups: int
+    exec_count: float
+    shape_bytes: int        # max(result, operand) per-device, one execution
+    wire_bytes: float
+    crosses_pod: Optional[bool] = None
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+def _ring_wire_bytes(op: str, group_size: int, shape_bytes: float) -> float:
+    """Per-device ring-schedule wire bytes for one execution (see above)."""
+    if op == "collective-permute":
+        return float(shape_bytes)
+    frac = (group_size - 1) / group_size if group_size > 0 else 1.0
+    if op == "all-reduce":
+        return 2.0 * frac * shape_bytes
+    return frac * shape_bytes
+
+
+def _first_shape_bytes(text: str) -> int:
+    """Bytes of the first array shape in a shape-or-tuple string."""
+    for m in _SHAPE_RE.finditer(text):
+        if m.group(1) in _DTYPE_BYTES:
+            dims = [int(d) for d in m.group(2).split(",") if d]
+            n = 1
+            for d in dims:
+                n *= d
+            return n * _DTYPE_BYTES[m.group(1)]
+    return 0
+
+
+def _operand_segment(rhs: str) -> str:
+    """The operand list of ``op(...)`` — rhs text up to the matching ')'."""
+    depth = 1
+    for i, ch in enumerate(rhs):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rhs[:i]
+    return rhs
+
+
+def _group_info(rhs: str, default_size: int = 0) -> Tuple[int, int]:
+    """(group size, n groups) from a replica_groups annotation."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", rhs)
+    if m:
+        return int(m.group(2)), int(m.group(1))
+    m = re.search(r"replica_groups=\{\{", rhs)
+    if m:
+        seg = _braced(rhs, rhs.index("replica_groups=") + len("replica_groups="))
+        groups = [g for g in seg.strip("{}").split("},{") if g.strip()]
+        first = [x for x in groups[0].split(",") if x.strip()] if groups else []
+        return len(first), len(groups)
+    m = re.search(r"source_target_pairs=\{", rhs)
+    if m:
+        return 2, 0
+    return default_size, 1
+
+
+def _braced(text: str, start: int) -> str:
+    """Balanced ``{...}`` segment starting at ``text[start]``."""
+    assert text[start] == "{", text[start:start + 20]
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[start:i + 1]
+    return text[start:]
 
 
 _INSTR_RE = re.compile(
@@ -122,8 +215,55 @@ def _parse_computations(hlo: str) -> Dict[str, List[Instr]]:
         m = _INSTR_RE.match(line)
         if m:
             comps[cur].append(Instr(name=m.group(1), result_text=m.group(2),
-                                    op=m.group(3), rhs=m.group(4)))
+                                    op=m.group(3), rhs=m.group(4),
+                                    root=stripped.startswith("ROOT")))
     return comps
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` across the API drift.
+
+    Older jax returns a one-element list of per-partition dicts; newer jax
+    returns the dict directly (and may return None for unsupported
+    backends).  Always hands back a (possibly empty) dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return dict(ca) if ca else {}
+
+
+def entry_io_bytes(hlo: str) -> Tuple[int, int]:
+    """(parameter bytes, root result bytes) of the ENTRY computation.
+
+    For a jitted kernel this is exactly the "read every input once, write
+    every output once" charge the analytic ``kernels/ops.py`` model makes —
+    the audit compares the two.
+    """
+    comps = _parse_computations(hlo)
+    entry = _find_entry(hlo, comps)
+    params = roots = 0
+    for ins in comps.get(entry, []):
+        if ins.op == "parameter":
+            params += _shapes_info(ins.result_text)[0]
+        if ins.root:
+            roots += _shapes_info(ins.result_text)[0]
+    return params, roots
+
+
+def _find_entry(hlo: str, comps: Dict[str, List[Instr]]) -> Optional[str]:
+    """Name of the ENTRY computation.
+
+    Parsed from the ``ENTRY %name (...)`` header itself — guessing by
+    proximity ("some computation name occurs near the ENTRY keyword") picks
+    a fusion body whenever one is referenced early in the entry body, which
+    zeroes every execution count downstream.
+    """
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return next((n for n in comps if n.startswith("main")),
+                next(iter(comps), None))
 
 
 def analyze_hlo(hlo: str) -> Dict[str, object]:
@@ -136,13 +276,7 @@ def analyze_hlo(hlo: str) -> Dict[str, object]:
             result_text_of[ins.name] = ins.result_text
 
     # --- call graph with multipliers -------------------------------------
-    entry = None
-    for name in comps:
-        if re.search(r"^ENTRY", hlo, re.M) and name in hlo.split("ENTRY", 1)[1][:400]:
-            entry = name
-            break
-    if entry is None:  # fallback: computation named main*
-        entry = next((n for n in comps if n.startswith("main")), None)
+    entry = _find_entry(hlo, comps)
     counts: Dict[str, float] = {n: 0.0 for n in comps}
     if entry:
         counts[entry] = 1.0
@@ -167,7 +301,8 @@ def analyze_hlo(hlo: str) -> Dict[str, object]:
                             scope_seed[mm.group(1)] = sc
                         break
                 trip = 1.0
-                mt = re.search(r'known_trip_count[^0-9]*"n":"(\d+)"', ins.rhs)
+                mt = re.search(r'known_trip_count[^0-9]*"n"\s*:\s*"?(\d+)',
+                               ins.rhs)
                 if mt:
                     trip = float(mt.group(1))
                 mb = re.search(r"body=%([\w\.\-]+)", ins.rhs)
@@ -271,8 +406,15 @@ def analyze_hlo(hlo: str) -> Dict[str, object]:
             fusion_access[cname] = access
 
     # --- accumulate -------------------------------------------------------
+    #: module-wide partition count (fallback group size for collectives
+    #: printed without replica_groups)
+    mnp = re.search(r"num_partitions=(\d+)", hlo[:hlo.find("\n")]
+                    if "\n" in hlo else hlo)
+    num_partitions = int(mnp.group(1)) if mnp else 0
     flops = 0.0
     coll: Dict[str, float] = {}
+    details: List[CollectiveDetail] = []
+    dma_bytes = 0.0
     traffic = 0.0
     #: HBM traffic inside named scopes that deploy as fused Pallas kernels
     #: (VMEM-resident on TPU) — reported separately so the roofline can show
@@ -290,8 +432,13 @@ def analyze_hlo(hlo: str) -> Dict[str, object]:
         for ins in instrs:
             rbytes, rshapes = _shapes_info(ins.result_text)
             if ins.op == "dot":
-                # result dims x contracting dims
-                lhs_m = re.match(r"%([\w\.\-]+)", ins.rhs)
+                # result dims x contracting dims.  The lhs operand may be
+                # typed ("dot(f32[128,128]{1,0} %gte.4, ...)" in compiled
+                # modules) or bare ("dot(%a, ...)"), so take the first
+                # %-name anywhere in the operand list, not at position 0 —
+                # re.match here silently dropped the contracting dims (the
+                # scan-matmul undercount ISSUE 8 leads with).
+                lhs_m = re.search(r"%([\w\.\-]+)", ins.rhs)
                 contract = 1
                 mlc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
                 if lhs_m and mlc and lhs_m.group(1) in result_text_of:
@@ -309,12 +456,33 @@ def analyze_hlo(hlo: str) -> Dict[str, object]:
             if ins.op in _COLLECTIVES or any(
                     ins.op == f"{k}-start" for k in _COLLECTIVES):
                 base = ins.op.replace("-start", "")
-                operand_bytes, _ = _shapes_info(ins.rhs.split(",", 1)[0]
-                                                if "(" not in ins.rhs else
-                                                ins.rhs[:ins.rhs.find(")")])
-                if _crosses_pod(ins.rhs):
-                    base = "xpod:" + base
-                coll[base] = coll.get(base, 0.0) + c * max(rbytes, operand_bytes)
+                # operands may be typed ("all-gather(u32[8,4]{1,0} %p)") or
+                # bare ("all-gather(%p)") — read inline shapes first, fall
+                # back to resolving the %-names
+                oseg = _operand_segment(ins.rhs)
+                operand_bytes, _ = _shapes_info(oseg)
+                if not operand_bytes:
+                    operand_bytes = sum(
+                        _shapes_info(result_text_of.get(om.group(1), ""))[0]
+                        for om in re.finditer(r"%([\w\.\-]+)", oseg))
+                shape_bytes = max(rbytes, operand_bytes)
+                gsize, ngroups = _group_info(ins.rhs, num_partitions)
+                xpod = _crosses_pod(ins.rhs)
+                details.append(CollectiveDetail(
+                    op=base, name=ins.name,
+                    dtype=rshapes[0][0] if rshapes else "?",
+                    group_size=gsize, n_groups=ngroups, exec_count=c,
+                    shape_bytes=int(shape_bytes),
+                    wire_bytes=c * _ring_wire_bytes(base, gsize, shape_bytes),
+                    crosses_pod=xpod))
+                key = ("xpod:" + base) if xpod else base
+                coll[key] = coll.get(key, 0.0) + c * shape_bytes
+            if ins.op in ("copy", "copy-start"):
+                # DMA proxy: explicit copies move their result once
+                # (copy-start results are (dest, src, ctx) tuples — charge
+                # the destination buffer only, not the aliased source)
+                dma_bytes += c * (rbytes if ins.op == "copy" else
+                                  _first_shape_bytes(ins.result_text))
             if schedulable and ins.op not in skip_ops \
                     and not ins.op.endswith("-done"):
                 # traffic proxy: results + named operands' result bytes.
@@ -366,9 +534,17 @@ def analyze_hlo(hlo: str) -> Dict[str, object]:
                 if tag is not None:
                     scoped[tag] = scoped.get(tag, 0.0) + t
 
+    wire: Dict[str, float] = {}
+    for d in details:
+        key = ("xpod:" + d.op) if d.crosses_pod else d.op
+        wire[key] = wire.get(key, 0.0) + d.wire_bytes
+
     return {
         "flops": flops,
         "collectives": {k: int(v) for k, v in coll.items()},
+        "collective_details": details,
+        "collective_wire_bytes": wire,
+        "dma_bytes": dma_bytes,
         "traffic_bytes": traffic,
         "scoped_traffic": {k: int(v) for k, v in scoped.items()},
         "n_computations": len(comps),

@@ -6,6 +6,21 @@ import os
 import jax
 
 
+def abstract_mesh(axis_sizes, axis_names):
+    """``jax.sharding.AbstractMesh`` across the API drift.
+
+    Newer jax takes ``AbstractMesh(axis_sizes, axis_names)``; 0.4.x takes a
+    single ``((name, size), ...)`` shape tuple.  Rule resolution and spec
+    tests only need ``.axis_names`` / ``.shape``, which both forms provide.
+    """
+    axis_sizes = tuple(axis_sizes)
+    axis_names = tuple(axis_names)
+    try:
+        return jax.sharding.AbstractMesh(axis_sizes, axis_names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi-pod adds a leading 2-pod axis (512).
 

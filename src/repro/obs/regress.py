@@ -61,6 +61,9 @@ GATES: List[Tuple[str, str, str]] = [
     ("kernels/hbm_bytes", "lower", EXACT),
     ("kernels/beats", "lower", EXACT),
     ("collectives/wire_bytes", "lower", EXACT),
+    ("audit/divergences", "lower", EXACT),
+    ("audit/hlo_bytes", "lower", EXACT),
+    ("audit/analytic_bytes", "lower", EXACT),
     ("ckpt/bytes_written", "lower", EXACT),
     ("ckpt/bytes_read", "lower", EXACT),
     ("ckpt/save_ms", "lower", WALL),

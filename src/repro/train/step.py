@@ -4,12 +4,12 @@ Two gradient paths:
 
 * baseline: ``jax.value_and_grad`` under jit — GSPMD inserts the gradient
   reduce-scatter/all-reduce over ('pod','data') automatically;
-* compressed (``rc.grad_compress_bits > 0`` on a multi-pod mesh): the whole
-  fwd+bwd runs inside ``shard_map`` *manual over 'pod' only*; each pod
-  produces pod-local grads (GSPMD still active over 'data'/'model' inside),
-  then the paper-codec exchange in distributed/collectives.py crosses the
-  pod boundary at ~bits/32 of the f32 volume, with error feedback carried in
-  ``TrainState.resid``.
+* compressed (``rc.grad_compress_bits > 0`` on a multi-pod mesh): the
+  fwd+bwd is vmapped over a pod-sharded leading batch axis so each pod
+  produces pod-local grads (GSPMD active over 'data'/'model' exactly as in
+  the plain path), then the paper-codec exchange in
+  distributed/collectives.py crosses the pod boundary at ~bits/32 of the
+  f32 volume, with error feedback carried in ``TrainState.resid``.
 """
 from __future__ import annotations
 
@@ -109,61 +109,65 @@ def make_train_step(api: ModelApi, cfg: ModelConfig, rc: RunConfig, mesh=None):
         flat_abs, treedef = jax.tree.flatten(abs_params)
         comp_mask = [collectives.compressible(a) for a in flat_abs]
 
-        def pod_body(params, resid_list, batch):
-            rules = shd.get_rules()
-            with shd.use_rules(dataclasses.replace(
-                    rules, exclude=frozenset({"pod"}))):
-                loss, grads = jax.value_and_grad(api.loss_fn)(params, batch)
-            flat_g = jax.tree.flatten(grads)[0]
-            planes, scales, raws, new_resid = [], [], [], []
-            for g, r1, is_c in zip(flat_g, resid_list, comp_mask):
-                r = r1[0]
-                if is_c:
-                    x = g.astype(jnp.float32) + r
-                    p_, s_ = collectives._quant_lastdim(x, bits)
-                    nr = x - collectives._dequant_lastdim(p_, s_, bits,
-                                                          x.shape)
-                    planes.append(p_[None])
-                    scales.append(s_[None])
-                    new_resid.append(nr[None])
-                else:
-                    raws.append(jax.lax.pmean(
-                        g.astype(jnp.float32), "pod").astype(g.dtype))
-                    new_resid.append(jnp.zeros_like(r1))
-            loss = jax.lax.pmean(loss, "pod")
-            return loss, planes, scales, raws, new_resid
+        def per_pod_grads(params, batch_p):
+            """(pods, B/pods, ...) batch -> per-pod (losses, grads).
 
-        n_comp = sum(comp_mask)
-        n_raw = len(comp_mask) - n_comp
-        sm = jax.shard_map(
-            pod_body, mesh=mesh, axis_names=frozenset({"pod"}),
-            in_specs=(P(), [P("pod")] * len(comp_mask), P("pod")),
-            out_specs=(P(), [P("pod")] * n_comp, [P("pod")] * n_comp,
-                       [P()] * n_raw, [P("pod")] * len(comp_mask)),
-            check_vma=False,
-        )
+            Pure auto-GSPMD: a ``shard_map`` manual over 'pod' would be the
+            direct spelling, but this XLA's SPMD partitioner aborts (Check
+            failed: IsManualSubgroup()) on any ``while`` op — scan-over-
+            layers, attention block scans — inside a manual subgroup, so
+            the per-pod fwd+bwd is a vmap over the pod-sharded leading axis
+            instead.  'data'/'model' shard inside exactly as in the plain
+            path; 'pod' is excluded from rule resolution because the
+            mapped-away pod dim is invisible to the activation specs.
+            """
+            rules = shd.get_rules()
+
+            def one(b):
+                with shd.use_rules(dataclasses.replace(
+                        rules, exclude=frozenset({"pod"}))
+                        if rules is not None else None):
+                    return jax.value_and_grad(api.loss_fn)(params, b)
+
+            return jax.vmap(one)(batch_p)
 
     def train_step(state: TrainState, batch):
         if compress:
-            resid_list = jax.tree.flatten(state.resid)[0]
-            loss, planes, scales, raws, new_resid_l = sm(
-                state.params, resid_list, batch)
-            # auto-GSPMD cross-pod exchange: static per-pod slices of the
-            # packed planes — SPMD inserts the (compressed) pod gathers
-            flat_mean, ci, ri = [], 0, 0
+            pod_ns = shd.named_sharding(P("pod"))
+            constrain = (lambda x: jax.lax.with_sharding_constraint(x, pod_ns)
+                         if pod_ns is not None else x)
+            batch_p = jax.tree.map(
+                lambda a: a.reshape((n_pods, a.shape[0] // n_pods)
+                                    + a.shape[1:]), batch)
+            batch_p = jax.tree.map(constrain, batch_p)
+            losses, grads_p = per_pod_grads(state.params, batch_p)
+            # auto-GSPMD cross-pod exchange: quantize pod-locally (leading
+            # pod dim pinned to the 'pod' axis), then static per-pod slices
+            # of the packed planes — SPMD inserts the (compressed) pod
+            # gathers; raw-fallback leaves cross the pod boundary verbatim
+            flat_g = jax.tree.flatten(grads_p)[0]
+            flat_r = jax.tree.flatten(state.resid)[0]
             flat_p = jax.tree.flatten(state.params)[0]
-            for pref, is_c in zip(flat_p, comp_mask):
-                if is_c:
-                    total = None
-                    for i in range(n_pods):
-                        d = collectives._dequant_lastdim(
-                            planes[ci][i], scales[ci][i], bits, pref.shape)
-                        total = d if total is None else total + d
-                    flat_mean.append((total / n_pods).astype(pref.dtype))
-                    ci += 1
-                else:
-                    flat_mean.append(raws[ri])
-                    ri += 1
+            flat_mean, new_resid_l = [], []
+            for g, r, pref, is_c in zip(flat_g, flat_r, flat_p, comp_mask):
+                if not is_c:
+                    flat_mean.append(jnp.mean(g.astype(jnp.float32), axis=0)
+                                     .astype(pref.dtype))
+                    new_resid_l.append(jnp.zeros_like(r))
+                    continue
+                x = constrain(g.astype(jnp.float32) + r)
+                planes, scales = collectives._quant_lastdim(x, bits)
+                planes, scales = constrain(planes), constrain(scales)
+                new_resid_l.append(
+                    x - collectives._dequant_lastdim(planes, scales, bits,
+                                                     x.shape))
+                total = None
+                for i in range(n_pods):
+                    d = collectives._dequant_lastdim(
+                        planes[i], scales[i], bits, pref.shape)
+                    total = d if total is None else total + d
+                flat_mean.append((total / n_pods).astype(pref.dtype))
+            loss = jnp.mean(losses)
             grads = jax.tree.unflatten(treedef, flat_mean)
             new_resid = jax.tree.unflatten(treedef, new_resid_l)
         else:

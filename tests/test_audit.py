@@ -1,0 +1,138 @@
+"""HLO-vs-analytic audit: pure-half unit tests + end-to-end CLI runs.
+
+The CLI tests subprocess ``python -m repro.launch.audit`` (the wire audit
+needs the 2-pod host-device mesh the module sets up for itself) and pin
+the PR's acceptance criteria: a clean run exits 0 with every wire check
+byte-exact, and perturbing the analytic model makes the audit exit
+nonzero.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import audit, hlo_walk  # noqa: E402
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run_cli(*extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.audit", *extra],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=560)
+
+
+# ---------------------------------------------------------------------------
+# pure half (no jax compilation)
+# ---------------------------------------------------------------------------
+
+def test_check_divergence_flags():
+    ok = audit.AuditCheck("a", 100.0, 100.0)
+    assert not ok.diverged and ok.rel_error == 0.0
+    bad = audit.AuditCheck("b", 100.0, 90.0)
+    assert bad.diverged
+    loose = audit.AuditCheck("c", 110.0, 100.0, rel_tol=0.25, unit="flops")
+    assert not loose.diverged
+
+
+def test_summarize_and_perturb():
+    checks = [audit.AuditCheck("a", 10.0, 10.0),
+              audit.AuditCheck("b", 20.0, 20.0)]
+    rep = audit.summarize(checks)
+    assert rep["ok"] and rep["divergences"] == 0 and rep["n_checks"] == 2
+    rep2 = audit.summarize(audit.perturb_analytic(checks, 1.01))
+    assert not rep2["ok"] and rep2["divergences"] == 2
+
+
+def test_ring_wire_bytes_convention():
+    # all-gather / reduce-scatter move (g-1)/g of the buffer, all-reduce 2x
+    # that, permute the full buffer; g=0 (unknown) uses the asymptotic factor
+    assert hlo_walk._ring_wire_bytes("all-gather", 2, 100.0) == 50.0
+    assert hlo_walk._ring_wire_bytes("all-reduce", 2, 100.0) == 100.0
+    assert hlo_walk._ring_wire_bytes("reduce-scatter", 4, 100.0) == 75.0
+    assert hlo_walk._ring_wire_bytes("collective-permute", 2, 100.0) == 100.0
+    assert hlo_walk._ring_wire_bytes("all-gather", 0, 100.0) == 100.0
+
+
+def test_group_info_forms():
+    assert hlo_walk._group_info("replica_groups=[4,2]<=[8]") == (2, 4)
+    assert hlo_walk._group_info("replica_groups={{0,1},{2,3}}") == (2, 2)
+    assert hlo_walk._group_info(
+        "source_target_pairs={{0,1},{1,0}}") == (2, 0)
+    assert hlo_walk._group_info("no annotation", default_size=8) == (8, 1)
+
+
+def test_entry_io_bytes_handwritten():
+    hlo = """\
+HloModule m
+
+%helper (a: f32[64]) -> f32[64] {
+  %a = f32[64]{0} parameter(0)
+  ROOT %n = f32[64]{0} negate(f32[64]{0} %a)
+}
+
+ENTRY %main (p0: f32[128,4], p1: s32[16]) -> (f32[128,4], s32[16]) {
+  %p0 = f32[128,4]{1,0} parameter(0)
+  %p1 = s32[16]{0} parameter(1)
+  ROOT %t = (f32[128,4]{1,0}, s32[16]{0}) tuple(%p0, %p1)
+}
+"""
+    params, roots = hlo_walk.entry_io_bytes(hlo)
+    assert params == 128 * 4 * 4 + 16 * 4
+    assert roots == 128 * 4 * 4 + 16 * 4
+
+
+def test_walker_wire_bytes_handwritten():
+    # one all-gather (g=2: wire == operand bytes) + one all-reduce (g=2:
+    # wire == buffer bytes), trip-count-free module
+    hlo = """\
+HloModule m, num_partitions=2
+
+ENTRY %main (p0: u32[8,4], p1: f32[7]) -> (u32[16,4], f32[7]) {
+  %p0 = u32[8,4]{1,0} parameter(0)
+  %p1 = f32[7]{0} parameter(1)
+  %ag = u32[16,4]{1,0} all-gather(u32[8,4]{1,0} %p0), replica_groups={{0,1}}, dimensions={0}
+  %ar = f32[7]{0} all-reduce(f32[7]{0} %p1), replica_groups={{0,1}}, to_apply=%add
+  ROOT %t = (u32[16,4]{1,0}, f32[7]{0}) tuple(%ag, %ar)
+}
+"""
+    res = hlo_walk.analyze_hlo(hlo)
+    details = {d.op: d for d in res["collective_details"]}
+    assert details["all-gather"].group_size == 2
+    assert details["all-gather"].wire_bytes == 8 * 4 * 4      # (g-1)*operand
+    assert details["all-reduce"].wire_bytes == 7 * 4          # 2(g-1)/g*buf
+    assert res["collective_wire_bytes"] == {
+        "all-gather": 8 * 4 * 4.0, "all-reduce": 7 * 4.0}
+
+
+# ---------------------------------------------------------------------------
+# end to end (subprocess: needs its own multi-device jax runtime)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_cli_clean_run_is_byte_exact(tmp_path):
+    out = tmp_path / "report.json"
+    r = _run_cli("--json", str(out), "--sizes", "65536", "--bits", "4", "8")
+    assert r.returncode == 0, r.stdout + r.stderr
+    report = json.loads(out.read_text())
+    assert report["ok"] and report["divergences"] == 0
+    wire = [c for c in report["checks"] if c["name"].startswith("wire/")]
+    assert len(wire) == 2
+    for c in wire:
+        # the acceptance criterion: HLO-derived collective wire bytes equal
+        # the analytic ExchangeStats bytes exactly for every exchanged tree
+        assert c["hlo_value"] == c["analytic_value"], c
+
+
+@pytest.mark.slow
+def test_cli_perturbed_analytic_exits_nonzero():
+    r = _run_cli("--sizes", "65536", "--bits", "8",
+                 "--perturb-analytic", "1.05")
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "DIVERGED" in r.stdout

@@ -24,8 +24,29 @@ def test_scan_matmul_flops_counted_with_trip_count():
     assert 0.9 * want <= res["flops"] <= 1.2 * want, (res["flops"], want)
     # XLA's own analysis undercounts the loop body (the reason this walker
     # exists) — verify we did better whenever XLA undercounts
-    xla = float((compiled.cost_analysis() or {}).get("flops", 0.0))
+    xla = float(hlo_walk.cost_analysis_dict(compiled).get("flops", 0.0))
     assert res["flops"] >= xla * 0.9
+
+
+def test_nested_scan_flops_multiply_trip_counts():
+    """scan-of-scans: body FLOPs must scale by the product of trip counts."""
+    n, k_outer, k_inner = 64, 3, 4
+
+    def f(x, w):
+        def inner(ci, _):
+            return ci @ w, None
+
+        def outer(c, _):
+            c2, _ = jax.lax.scan(inner, c, None, length=k_inner)
+            return c2, None
+
+        out, _ = jax.lax.scan(outer, x, None, length=k_outer)
+        return out
+
+    compiled = jax.jit(f).lower(jnp.ones((n, n)), jnp.ones((n, n))).compile()
+    res = hlo_walk.analyze_hlo(compiled.as_text())
+    want = k_outer * k_inner * 2 * n ** 3
+    assert 0.9 * want <= res["flops"] <= 1.2 * want, (res["flops"], want)
 
 
 def test_unrolled_matches_scan_counts():

@@ -1,15 +1,15 @@
 """Logical sharding rules: divisibility fallbacks and spec resolution."""
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding as shd
+from repro.launch.mesh import abstract_mesh
 
 
 @pytest.fixture()
 def mesh_rules():
     # 1 real device: an abstract mesh suffices for rule resolution
-    mesh = jax.sharding.AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+    mesh = abstract_mesh((2, 2, 2), ("pod", "data", "model"))
     return shd.Rules(mesh=mesh, seq_shard=True, fsdp=True)
 
 
@@ -26,7 +26,7 @@ def test_divisibility_fallbacks(mesh_rules):
 
 
 def test_seq_and_fsdp_toggles():
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    mesh = abstract_mesh((2, 2), ("data", "model"))
     r = shd.Rules(mesh=mesh, seq_shard=False, fsdp=False)
     assert r.resolve("seq", 128) is None
     assert r.resolve("fsdp", 128) is None
