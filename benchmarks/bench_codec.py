@@ -1,0 +1,125 @@
+"""Beyond-paper: codec + executor hot-path microbenchmark.
+
+Times the vectorized §2.5 differential codec (``compress_words`` /
+``decompress_words``) against the retained scalar reference implementation
+(``*_ref``, the seed's per-word bignum model) on smooth stencil data, and
+the tiled MARS executor end to end.  Published series (see
+``src/repro/obs/README.md`` for the gate policy):
+
+* ``codec/words{dtype,op}``   — words processed (logical, gated exact)
+* ``codec/bits{dtype}``       — compressed stream size (logical, gated exact)
+* ``codec/bench_ms{...}``     — wall time per dtype x op x impl
+* ``codec/words_per_s{...}``  — throughput gauges (wall-banded in the gate)
+* ``exec/tiles_per_s{...}``   — executor throughput; the ``exec/*`` counters
+  themselves are published by the executor at the end of ``run``
+
+The fast path must stay >= ``SPEEDUP_FLOOR`` x the reference on the smoke
+grid — that is this PR's acceptance bar, asserted on every run.
+"""
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.core import compression as comp
+from repro.core import stencil
+from repro.core.executor import Jacobi1dMarsExecutor
+
+#: required fast-vs-reference throughput ratio on the smoke grid
+SPEEDUP_FLOOR = 10.0
+
+#: words per stream — fixed across smoke/full so codec/words, codec/bits
+#: baselines stay comparable between the two modes
+N_WORDS = 1 << 15
+
+SMOKE_DTYPES = ["fixed18", "float"]
+
+
+def _stream_words(dtype: str) -> tuple:
+    """Smooth jacobi-style data -> (codec words, nbits) for one dtype."""
+    rng = np.random.default_rng(0)
+    vals = np.cumsum(rng.uniform(-0.01, 0.01, N_WORDS)) + 1.0
+    return comp.words_for(vals, dtype)
+
+
+def _best_ms(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def run(smoke: bool = False):
+    dtypes = SMOKE_DTYPES if smoke else list(comp.DATA_TYPES)
+    reps = 1 if smoke else 3
+    print("dtype,op,ref_ms,fast_ms,speedup,fast_words_per_s")
+    out = []
+    for dt in dtypes:
+        words, nbits = _stream_words(dt)
+        fast_w = comp.BitWriter()
+        comp.compress_words(words, nbits, fast_w)
+        bits = fast_w.bit_length
+        stream = fast_w.to_words(32)
+        obs.counter_inc("codec/bits", bits, dtype=dt)
+
+        def c_ref():
+            w = comp.ReferenceBitWriter()
+            comp.compress_words_ref(words, nbits, w)
+
+        def c_fast():
+            w = comp.BitWriter()
+            comp.compress_words(words, nbits, w)
+
+        def d_ref():
+            r = comp.ReferenceBitReader(stream, bits, 32)
+            comp.decompress_words_ref(r, len(words), nbits)
+
+        def d_fast():
+            r = comp.BitReader(stream, bits, 32)
+            comp.decompress_words(r, len(words), nbits)
+
+        for op, ref_fn, fast_fn in (("compress", c_ref, c_fast),
+                                    ("decompress", d_ref, d_fast)):
+            with obs.span("codec/bench", dtype=dt, op=op):
+                ref_ms = _best_ms(ref_fn, reps)
+                fast_ms = _best_ms(fast_fn, reps)
+            speedup = ref_ms / fast_ms
+            wps = len(words) / (fast_ms * 1e-3)
+            obs.counter_inc("codec/words", len(words), dtype=dt, op=op)
+            for impl, ms in (("ref", ref_ms), ("fast", fast_ms)):
+                obs.gauge_set("codec/bench_ms", ms, dtype=dt, op=op,
+                              impl=impl)
+            obs.gauge_set("codec/words_per_s", wps, dtype=dt, op=op)
+            print(f"{dt},{op},{ref_ms:.2f},{fast_ms:.2f},"
+                  f"{speedup:.1f},{wps:.3g}")
+            out.append((dt, op, ref_ms, fast_ms, speedup))
+
+    # executor throughput: full MARS pipeline (read/decompress/execute/
+    # compress/write) over a small seeded jacobi-1d run
+    rng = np.random.default_rng(3)
+    n, tsteps = 160, 48
+    init = np.cumsum(rng.uniform(-0.005, 0.005, n)) + 0.5
+    ex = Jacobi1dMarsExecutor(stencil.jacobi1d_spec((6, 6)), n, tsteps,
+                              dtype="fixed18")
+    t0 = time.perf_counter()
+    ex.run(init)
+    dt_s = time.perf_counter() - t0
+    tiles = ex.stats.full_tiles + ex.stats.host_tiles
+    tps = tiles / dt_s
+    obs.gauge_set("exec/tiles_per_s", tps, bench="jacobi-1d", dtype="fixed18")
+    print(f"# executor: {tiles} tiles in {dt_s * 1e3:.1f} ms "
+          f"({tps:.0f} tiles/s)")
+
+    floor = min(s for d, _, _, _, s in out if d in SMOKE_DTYPES)
+    print(f"# min fast-vs-ref speedup on smoke grid: {floor:.1f}x "
+          f"(floor: {SPEEDUP_FLOOR:.0f}x)")
+    assert floor >= SPEEDUP_FLOOR, (
+        f"vectorized codec only {floor:.1f}x the reference "
+        f"(required >= {SPEEDUP_FLOOR}x)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -75,13 +75,22 @@ def run(smoke: bool = False):
                   f"{cyc['mars'] / base:.2f},{cyc['mars_pack'] / base:.2f},"
                   f"{base}")
             out.append((name, ts, dt, cyc))
-    # headline claim: up to 7x+ decrease vs un-optimized accesses
+    # headline claim: the paper reports up to 7x vs un-optimized accesses.
+    # The seed repo reproduced that number only through a lexsort-key bug in
+    # core/transfer._runs that never coalesced contiguous runs within a row,
+    # inflating the minimal baseline; with the corrected HLS-style model the
+    # honest grid peak is lower (minimal coalesces what it can).
     best = max(c["minimal"] / c["mars_comp"] for *_, c in out)
-    print(f"# max I/O-cycle reduction vs minimal: {best:.1f}x "
-          f"(paper: up to 7x)")
+    best_unopt = max(max(c["minimal"], c["bbox"]) / c["mars_comp"]
+                     for *_, c in out)
+    print(f"# max I/O-cycle reduction vs minimal: {best:.1f}x; vs worst "
+          f"un-optimized pattern: {best_unopt:.1f}x (paper: up to 7x against "
+          f"an uncoalesced baseline)")
     obs.gauge_set("fig10/max_cycle_reduction", best)
-    if not smoke:  # the smoke subset omits the 2D cases that reach 7x
-        assert best >= 7.0
+    obs.gauge_set("fig10/max_cycle_reduction_unopt", best_unopt)
+    if not smoke:  # the smoke subset omits the 2D cases with the best gains
+        assert best >= 2.5, best
+        assert best_unopt >= 3.5, best_unopt
     return out
 
 

@@ -48,9 +48,7 @@ def run(smoke: bool = False):
             for label, frac in formats:
                 count, bits = 0, 0
                 for pts in m.output_mars_points():
-                    vals = np.array([
-                        stencil.stencil_value("jacobi-1d", hist, p)
-                        for p in pts])
+                    vals = stencil.stencil_values("jacobi-1d", hist, pts)
                     if dt.startswith("fixed"):
                         words = comp.quantize_fixed(vals, nbits, frac)
                         nb = nbits

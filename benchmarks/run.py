@@ -34,10 +34,10 @@ DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out")
 
 
 def sections(smoke: bool):
-    from benchmarks import (bench_audit, bench_ckpt, bench_collectives,
-                            bench_kvcache, bench_stencil_kernel,
-                            fig10_transfer, fig11_ratio, table1_mars,
-                            table2_compile)
+    from benchmarks import (bench_audit, bench_ckpt, bench_codec,
+                            bench_collectives, bench_kvcache,
+                            bench_stencil_kernel, fig10_transfer,
+                            fig11_ratio, table1_mars, table2_compile)
 
     # every section runs in smoke mode too (reduced grids) so the
     # regression gate sees kernels/collectives/ckpt series in CI
@@ -49,6 +49,8 @@ def sections(smoke: bool):
          lambda: fig10_transfer.run(smoke=smoke)),
         ("fig11_ratio", "Fig 11 — compression ratio vs dtype x tile",
          lambda: fig11_ratio.run(smoke=smoke)),
+        ("bench_codec", "Beyond-paper: vectorized codec + executor",
+         lambda: bench_codec.run(smoke=smoke)),
         ("bench_kvcache", "Beyond-paper: packed KV cache", bench_kvcache.run),
         ("bench_collectives", "Beyond-paper: compressed collectives",
          lambda: bench_collectives.run(smoke=smoke)),

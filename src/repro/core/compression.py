@@ -23,6 +23,16 @@ every MARS so blocks stay atomic.
 
 Floating-point data is compressed on its raw bit pattern (neighbouring values
 share exponent/high-mantissa bits), exactly as the paper's hardware would.
+
+Two implementations of the same bit format live here:
+
+* the **fast path** (``BitWriter``/``BitReader`` + ``compress_words`` /
+  ``decompress_words``): chunked uint64 word buffers and vectorized numpy
+  delta/length/bit-packing — O(n) in stream length, no Python bignum;
+* the **reference path** (``ReferenceBitWriter``/``ReferenceBitReader`` +
+  ``compress_words_ref``/``decompress_words_ref``): the original per-word,
+  single-bignum model, kept as the equivalence oracle — property tests and
+  ``benchmarks/bench_codec.py`` assert the two produce bit-identical streams.
 """
 from __future__ import annotations
 
@@ -34,16 +44,164 @@ import numpy as np
 
 from repro.obs import instrument as obs
 
+_M64 = (1 << 64) - 1
+_U64 = np.uint64
+
 
 def length_field_bits(nbits: int) -> int:
     return int(math.floor(1 + math.log2(nbits)))
 
 
 # ---------------------------------------------------------------------------
-# Bit-level reader / writer
+# Bit-level reader / writer (fast path: chunked uint64 buffers, no bignum)
 # ---------------------------------------------------------------------------
 
 class BitWriter:
+    """Append-only bit stream held as 64-bit chunks (LSB-first bit order)."""
+
+    __slots__ = ("_chunks", "_nbits")
+
+    def __init__(self) -> None:
+        self._chunks = np.zeros(16, dtype=np.uint64)
+        self._nbits = 0
+
+    def _reserve(self, nbits: int) -> None:
+        need = (self._nbits + nbits) // 64 + 2
+        if need > len(self._chunks):
+            grown = np.zeros(max(need, 2 * len(self._chunks)), dtype=np.uint64)
+            grown[: len(self._chunks)] = self._chunks
+            self._chunks = grown
+
+    def write(self, value: int, nbits: int) -> None:
+        if nbits == 0:
+            return
+        self._reserve(nbits)
+        v = int(value) & ((1 << nbits) - 1)
+        w, off = divmod(self._nbits, 64)
+        self._chunks[w] |= _U64((v << off) & _M64)
+        if off + nbits > 64:
+            self._chunks[w + 1] = _U64(v >> (64 - off))
+        self._nbits += nbits
+
+    def write_many(self, values: np.ndarray, widths: np.ndarray) -> None:
+        """Pack many variable-width fields (each <= 64 bits) at once.
+
+        Fields land at consecutive bit offsets; a field spans at most two
+        64-bit chunks, so the whole batch is two masked scatters.
+        """
+        values = np.asarray(values, dtype=np.uint64)
+        widths = np.asarray(widths, dtype=np.int64)
+        total = int(widths.sum())
+        if total == 0:
+            return
+        self._reserve(total)
+        offs = self._nbits + np.concatenate(
+            ([0], np.cumsum(widths[:-1], dtype=np.int64)))
+        w = offs >> 6
+        sh = (offs & 63).astype(np.uint64)
+        width_u = widths.astype(np.uint64)
+        mask = np.where(widths >= 64, _U64(_M64),
+                        (_U64(1) << (width_u & _U64(63))) - _U64(1))
+        v = values & mask
+        lo = v << sh
+        hi = np.where(sh > 0, v >> ((_U64(64) - sh) & _U64(63)), _U64(0))
+        np.bitwise_or.at(self._chunks, w, lo)
+        np.bitwise_or.at(self._chunks, w + 1, hi)
+        self._nbits += total
+
+    @property
+    def bit_length(self) -> int:
+        return self._nbits
+
+    def to_words(self, word_bits: int = 32) -> np.ndarray:
+        n_words = (self._nbits + word_bits - 1) // word_bits
+        used = (self._nbits + 63) // 64
+        chunks = self._chunks[:used]
+        if word_bits == 64:
+            return chunks[:n_words].copy()
+        if 64 % word_bits == 0:
+            per = 64 // word_bits
+            shifts = (np.arange(per, dtype=np.uint64) * _U64(word_bits))
+            mask = _U64((1 << word_bits) - 1)
+            split = (chunks[:, None] >> shifts[None, :]) & mask
+            return split.reshape(-1)[:n_words].copy()
+        reader = BitReader(chunks, self._nbits, 64)
+        out = np.zeros(n_words, dtype=np.uint64)
+        for k in range(n_words):
+            out[k] = reader.read(min(word_bits, self._nbits - k * word_bits))
+        return out
+
+
+def _repack_chunks(words: np.ndarray, total_bits: int,
+                   word_bits: int) -> List[int]:
+    """word_bits-wide words -> list of 64-bit Python-int chunks (+1 pad)."""
+    n_chunks = (total_bits + 63) // 64
+    if word_bits == 64:
+        out = [int(w) for w in np.asarray(words, dtype=np.uint64)[:n_chunks]]
+    elif 64 % word_bits == 0:
+        per = 64 // word_bits
+        arr = np.asarray(words, dtype=np.uint64)
+        mask = _U64((1 << word_bits) - 1)
+        pad = (-len(arr)) % per
+        if pad:
+            arr = np.concatenate([arr, np.zeros(pad, dtype=np.uint64)])
+        arr = (arr & mask).reshape(-1, per)
+        shifts = (np.arange(per, dtype=np.uint64) * _U64(word_bits))
+        merged = np.bitwise_or.reduce(arr << shifts[None, :], axis=1)
+        out = [int(c) for c in merged[:n_chunks]]
+    else:
+        out, cur, fill = [], 0, 0
+        mask = (1 << word_bits) - 1
+        for w in words:
+            cur |= (int(w) & mask) << fill
+            fill += word_bits
+            while fill >= 64:
+                out.append(cur & _M64)
+                cur >>= 64
+                fill -= 64
+        if fill:
+            out.append(cur & _M64)
+        out = out[:n_chunks]
+    out.extend([0] * (n_chunks + 2 - len(out)))
+    return out
+
+
+class BitReader:
+    """Bit stream reader over 64-bit chunks (no bignum accumulator)."""
+
+    __slots__ = ("_chunks", "_pos", "_len")
+
+    def __init__(self, words: np.ndarray, total_bits: int, word_bits: int = 32):
+        self._chunks = _repack_chunks(words, total_bits, word_bits)
+        self._pos = 0
+        self._len = total_bits
+
+    def seek(self, bit: int) -> None:
+        if not 0 <= bit <= self._len:
+            raise ValueError(
+                f"seek({bit}) out of bounds for stream of {self._len} bits")
+        self._pos = bit
+
+    def read(self, nbits: int) -> int:
+        if nbits == 0:
+            return 0
+        if self._pos + nbits > self._len:
+            raise EOFError("read past end of compressed stream")
+        w, off = divmod(self._pos, 64)
+        v = self._chunks[w] >> off
+        if off + nbits > 64:
+            v |= self._chunks[w + 1] << (64 - off)
+        self._pos += nbits
+        return v & ((1 << nbits) - 1)
+
+
+# ---------------------------------------------------------------------------
+# Reference bit-level reader / writer (original single-bignum model)
+# ---------------------------------------------------------------------------
+
+class ReferenceBitWriter:
+    """Original per-write bignum accumulator — equivalence oracle only."""
+
     __slots__ = ("_acc", "_nbits")
 
     def __init__(self) -> None:
@@ -72,7 +230,9 @@ class BitWriter:
         return out
 
 
-class BitReader:
+class ReferenceBitReader:
+    """Original single-bignum reader — equivalence oracle only."""
+
     __slots__ = ("_acc", "_pos", "_len")
 
     def __init__(self, words: np.ndarray, total_bits: int, word_bits: int = 32):
@@ -84,6 +244,9 @@ class BitReader:
         self._len = total_bits
 
     def seek(self, bit: int) -> None:
+        if not 0 <= bit <= self._len:
+            raise ValueError(
+                f"seek({bit}) out of bounds for stream of {self._len} bits")
         self._pos = bit
 
     def read(self, nbits: int) -> int:
@@ -104,8 +267,58 @@ def _significant_len(d: int) -> int:
     return (d if d >= 0 else -d - 1).bit_length()
 
 
-def compress_words(words: Sequence[int], nbits: int, writer: BitWriter) -> None:
-    """Append the compressed encoding of ``words`` to ``writer``."""
+def _bit_length_u64(v: np.ndarray) -> np.ndarray:
+    """Exact per-element bit length of a uint64 array (binary search)."""
+    v = v.copy()
+    k = np.zeros(v.shape, dtype=np.uint64)
+    for s in (32, 16, 8, 4, 2, 1):
+        big = v >= (_U64(1) << _U64(s))
+        k[big] += _U64(s)
+        v[big] >>= _U64(s)
+    return k + (v > 0)
+
+
+def compress_words(words: Sequence[int], nbits: int, writer) -> None:
+    """Append the compressed encoding of ``words`` to ``writer``.
+
+    Vectorized: block-wise delta, significant-length and low-bit extraction
+    in numpy, then one ``write_many`` packing all fields into the writer's
+    uint64 chunk buffer.  Falls back to the scalar reference loop for
+    writers without ``write_many`` (e.g. ``ReferenceBitWriter``).
+    """
+    if not hasattr(writer, "write_many"):
+        compress_words_ref(words, nbits, writer)
+        return
+    arr = np.asarray(words, dtype=np.uint64).reshape(-1)
+    n = arr.size
+    if n == 0:
+        return
+    F = length_field_bits(nbits)
+    mask = _U64((1 << nbits) - 1)
+    half = _U64(1 << (nbits - 1))
+    arr = arr & mask
+    if n == 1:
+        writer.write(int(arr[0]), nbits)
+        return
+    d = (arr[1:] - arr[:-1]) & mask          # delta mod 2^nbits
+    neg = d >= half                          # signed delta < 0
+    mag = np.where(neg, mask - d, d)         # |d| or |d|-1: -d-1 == mask-d
+    k = _bit_length_u64(mag)
+    low_width = np.maximum(k.astype(np.int64) - 1, 0)
+    low_mask = np.where(k > 0, (_U64(1) << ((k - _U64(1)) & _U64(63)))
+                        - _U64(1), _U64(0))
+    low = d & low_mask                       # d mod 2^(k-1), both signs
+    header = k | (neg.astype(np.uint64) << _U64(F))
+    vals = np.zeros(2 * n - 1, dtype=np.uint64)
+    wids = np.zeros(2 * n - 1, dtype=np.int64)
+    vals[0], wids[0] = arr[0], nbits
+    vals[1::2], wids[1::2] = header, F + 1
+    vals[2::2], wids[2::2] = low, low_width
+    writer.write_many(vals, wids)
+
+
+def compress_words_ref(words: Sequence[int], nbits: int, writer) -> None:
+    """Reference per-word encoder (original implementation, oracle only)."""
     F = length_field_bits(nbits)
     mask = (1 << nbits) - 1
     half = 1 << (nbits - 1)
@@ -125,9 +338,69 @@ def compress_words(words: Sequence[int], nbits: int, writer: BitWriter) -> None:
                 low = (d if d >= 0 else d + (1 << k)) & ((1 << (k - 1)) - 1)
                 writer.write(low, k - 1)
         prev = w
+    return
 
 
 def decompress_words(reader: BitReader, count: int, nbits: int) -> np.ndarray:
+    """Decode ``count`` words; vectorized reconstruction after a field scan.
+
+    The field widths are data-dependent (the length field of word ``i`` sits
+    after word ``i-1``'s low bits) so offsets are scanned sequentially —
+    O(1) chunk reads per word, no bignum — and the delta chain is then
+    rebuilt in one masked ``cumsum``.
+    """
+    if not isinstance(reader, BitReader):
+        return decompress_words_ref(reader, count, nbits)
+    out = np.zeros(count, dtype=np.uint64)
+    if count == 0:
+        return out
+    F = length_field_bits(nbits)
+    first = reader.read(nbits)
+    if count == 1:
+        out[0] = first
+        return out
+    f_mask = (1 << F) - 1
+    chunks = reader._chunks
+    pos, end = reader._pos, reader._len
+    ks = np.zeros(count - 1, dtype=np.int64)
+    signs = np.zeros(count - 1, dtype=np.uint64)
+    lows = np.zeros(count - 1, dtype=np.uint64)
+    for i in range(count - 1):
+        if pos + F + 1 > end:
+            raise EOFError("read past end of compressed stream")
+        w, off = divmod(pos, 64)
+        # 128-off valid bits: enough for header + low except when a long
+        # low field straddles a third chunk (off > 128 - (F + k))
+        window = (chunks[w] >> off) | (chunks[w + 1] << (64 - off))
+        k = window & f_mask
+        if k >= nbits:
+            raise ValueError(
+                f"corrupt stream: length field {k} >= word width {nbits}")
+        width = F + 1 + (k - 1 if k > 0 else 0)
+        if pos + width > end:
+            raise EOFError("read past end of compressed stream")
+        if k > 1:
+            if 128 - off < F + k:
+                window |= chunks[w + 2] << (128 - off)
+            lows[i] = (window >> (F + 1)) & ((1 << (k - 1)) - 1)
+        ks[i] = k
+        signs[i] = (window >> F) & 1
+        pos += width
+    reader._pos = pos
+    mask = _U64((1 << nbits) - 1)
+    ku = ks.astype(np.uint64)
+    pos_d = (_U64(1) << ((ku - _U64(1)) & _U64(63))) + lows   # 2^(k-1) + low
+    neg_d = (lows - (_U64(1) << (ku & _U64(63)))) & mask      # low - 2^k
+    d = np.where(ks > 0,
+                 np.where(signs == 0, pos_d, neg_d),
+                 np.where(signs == 0, _U64(0), mask))
+    out[0] = first
+    out[1:] = (_U64(first) + np.cumsum(d, dtype=np.uint64)) & mask
+    return out
+
+
+def decompress_words_ref(reader, count: int, nbits: int) -> np.ndarray:
+    """Reference per-word decoder (original implementation, oracle only)."""
     F = length_field_bits(nbits)
     mask = (1 << nbits) - 1
     out = np.zeros(count, dtype=np.uint64)
@@ -170,12 +443,7 @@ def compressed_cost_bits(words: np.ndarray, nbits: int) -> int:
         d = ((d + span // 2) % span) - span // 2
     with np.errstate(over="ignore"):
         mag = np.where(d >= 0, d, -d - 1).astype(np.uint64)
-    # bit length via float exponent: exact because mag < 2^63 and frexp is
-    # exact for integers below 2^53; for nbits > 52 fall back to object loop
-    if nbits <= 52:
-        k = np.where(mag == 0, 0, np.floor(np.log2(np.maximum(mag, 1))).astype(np.int64) + 1)
-    else:
-        k = np.array([int(int(m).bit_length()) for m in mag], dtype=np.int64)
+    k = _bit_length_u64(mag).astype(np.int64)
     per_word = F + 1 + np.maximum(k - 1, 0)
     return int(nbits + per_word.sum())
 
@@ -255,11 +523,32 @@ def compress_mars_stream(mars_data: Sequence[np.ndarray], nbits: int,
 
 
 def decompress_mars(stream: CompressedStream, index: int) -> np.ndarray:
-    """Seek (via marker) and decode exactly one MARS."""
-    reader = BitReader(stream.words, stream.total_bits, 32)
+    """Seek (via marker) and decode exactly one MARS.
+
+    Corrupt metadata fails loudly: a marker pointing past ``total_bits``
+    or a count larger than the remaining stream raises ``ValueError``
+    instead of decoding garbage.
+    """
+    if not 0 <= index < len(stream.markers):
+        raise IndexError(
+            f"MARS index {index} out of range ({len(stream.markers)} markers)")
     m = stream.markers[index]
-    reader.seek(m.coarse * stream.bus_bits + m.fine)
-    return decompress_words(reader, stream.counts[index], stream.nbits)
+    start = m.coarse * stream.bus_bits + m.fine
+    if not 0 <= start <= stream.total_bits:
+        raise ValueError(
+            f"corrupt marker for MARS {index}: bit offset {start} outside "
+            f"stream of {stream.total_bits} bits")
+    count = stream.counts[index]
+    if count < 0:
+        raise ValueError(f"corrupt count for MARS {index}: {count}")
+    reader = BitReader(stream.words, stream.total_bits, 32)
+    reader.seek(start)
+    try:
+        return decompress_words(reader, count, stream.nbits)
+    except (EOFError, ValueError) as e:
+        raise ValueError(
+            f"corrupt stream decoding MARS {index} "
+            f"(count={count}, start bit {start}): {e}") from e
 
 
 # ---------------------------------------------------------------------------

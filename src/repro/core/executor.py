@@ -15,7 +15,7 @@ whole layout + codec machinery, standing in for the paper's on-board runs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
@@ -61,6 +61,9 @@ class Jacobi1dMarsExecutor:
         self.nbits = comp.DATA_TYPES[dtype][0]
         self.analysis: MarsAnalysis = analyze(spec)
         self.layout: LayoutResult = layout_for_analysis(self.analysis)
+        #: MARS id -> slot in the layout order (avoids per-read .index())
+        self._slot: Dict[int, int] = {m: k for k, m
+                                      in enumerate(self.layout.order)}
         # global memory: tile id -> compressed stream of its out-MARS
         self.memory: Dict[TileId, comp.CompressedStream] = {}
         self.stats = ExecStats()
@@ -116,9 +119,12 @@ class Jacobi1dMarsExecutor:
             return words.astype(np.uint32).view(np.float32).astype(np.float64)
         return words.view(np.float64)
 
-    def _read_input_values(self, tile: TileId) -> Dict[Tuple[int, int], float]:
-        """Fetch all consumed MARS of this tile, decompressing via markers."""
-        values: Dict[Tuple[int, int], float] = {}
+    def _read_inputs(self, tile: TileId) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Fetch all consumed MARS of this tile, decompressing via markers.
+
+        Returns (points, values) array pairs — no per-point dict fills.
+        """
+        out: List[Tuple[np.ndarray, np.ndarray]] = []
         c0 = np.asarray(tile)
         for producer_off, mars_ids in self.analysis.consumed.items():
             producer = tuple(int(x) for x in (c0 + np.asarray(producer_off)))
@@ -127,23 +133,16 @@ class Jacobi1dMarsExecutor:
                 continue  # producer outside computed domain
             pa = analyze(self.spec, producer)
             for mid in mars_ids:
-                # position of this MARS in the producer's layout order
-                slot = self.layout.order.index(mid)
-                words = comp.decompress_mars(stream, slot)
-                vals = self._decode(words)
-                pts = pa.out_mars[mid].points
-                for p, v in zip(pts, vals):
-                    values[(int(p[0]), int(p[1]))] = float(v)
+                words = comp.decompress_mars(stream, self._slot[mid])
+                out.append((pa.out_mars[mid].points, self._decode(words)))
                 self.stats.mars_read += 1
-        return values
+        return out
 
-    def _write_output(self, tile: TileId, produced: Dict[Tuple[int, int], float],
-                      pa: MarsAnalysis) -> None:
+    def _write_output(self, tile: TileId, pa: MarsAnalysis,
+                      getval: Callable[[np.ndarray], np.ndarray]) -> None:
         mars_vals: List[np.ndarray] = []
         for mid in self.layout.order:
-            pts = pa.out_mars[mid].points
-            vals = np.array([produced[(int(p[0]), int(p[1]))] for p in pts])
-            mars_vals.append(self._encode(vals))
+            mars_vals.append(self._encode(getval(pa.out_mars[mid].points)))
         stream = comp.compress_mars_stream(mars_vals, self.nbits)
         self.memory[tile] = stream
         self.stats.mars_written += len(mars_vals)
@@ -170,46 +169,72 @@ class Jacobi1dMarsExecutor:
                 continue
             pa = analyze(self.spec, tile)
             if not self._is_full(tile, pts):
-                # host tile: write back MARS from the reference allocation
-                produced = {(int(p[0]), int(p[1])): float(hist[p[0], p[1]])
-                            for p in pts}
-                # pad missing MARS points (outside domain) with zeros — no
-                # full tile consumes them (§4.3: "no FPGA tiles need any
-                # missing MARS data from partial tiles")
-                full_prod = dict(produced)
-                for m in pa.out_mars:
-                    for p in m.points:
-                        full_prod.setdefault((int(p[0]), int(p[1])), 0.0)
-                self._write_output(tile, full_prod, pa)
+                # host tile: write back MARS from the reference allocation,
+                # padding out-of-domain MARS points with zeros — no full
+                # tile consumes them (§4.3: "no FPGA tiles need any missing
+                # MARS data from partial tiles")
+                def host_getval(mpts: np.ndarray) -> np.ndarray:
+                    t, i = mpts[:, 0], mpts[:, 1]
+                    ok = ((t >= 1) & (t <= self.tsteps)
+                          & (i >= 0) & (i <= self.n - 1))
+                    vals = np.zeros(mpts.shape[0])
+                    vals[ok] = hist[t[ok], i[ok]]
+                    return vals
+
+                self._write_output(tile, pa, host_getval)
                 self.stats.host_tiles += 1
                 continue
 
-            inputs = self._read_input_values(tile)
-            produced: Dict[Tuple[int, int], float] = {}
-
-            def val(t: int, i: int) -> float:
-                if (t, i) in produced:
-                    return produced[(t, i)]
-                if (t, i) in inputs:
-                    return inputs[(t, i)]
-                if t == 0:
-                    return float(init[i])
-                # boundary values are never updated by the stencil
-                if i == 0 or i == self.n - 1:
-                    return float(init[i])
-                raise KeyError((t, i))
+            # full tile: dense wavefront buffer over the tile's (t, i)
+            # window plus a one-cell halo; rows execute in ascending t,
+            # each as one vectorized stencil update (no per-point dicts).
+            t0 = int(pts[:, 0].min()) - 1           # buffer row 0 -> t0
+            c0 = int(pts[:, 1].min()) - 1           # buffer col 0 -> c0
+            n_rows = int(pts[:, 0].max()) - t0 + 1
+            n_cols = int(pts[:, 1].max()) - c0 + 2
+            buf = np.zeros((n_rows, n_cols))
+            filled = np.zeros((n_rows, n_cols), dtype=bool)
+            # seed values the stencil may read but no tile produces: the
+            # initial state (t == 0) and the never-updated boundary columns
+            if t0 == 0:
+                buf[0, :] = init[c0:c0 + n_cols]
+                filled[0, :] = True
+            for col, edge in ((0, c0), (n_cols - 1, c0 + n_cols - 1)):
+                if edge == 0 or edge == self.n - 1:
+                    buf[:, col] = init[edge]
+                    filled[:, col] = True
+            # consumed MARS override the seeds (they carry quantized values)
+            for ipts, ivals in self._read_inputs(tile):
+                r, c = ipts[:, 0] - t0, ipts[:, 1] - c0
+                ok = (r >= 0) & (r < n_rows) & (c >= 0) & (c < n_cols)
+                buf[r[ok], c[ok]] = ivals[ok]
+                filled[r[ok], c[ok]] = True
 
             order = np.lexsort(pts.T[::-1])  # by (t, i): legal for jacobi
-            for p in pts[order]:
-                t, i = int(p[0]), int(p[1])
-                produced[(t, i)] = (val(t - 1, i - 1) + val(t - 1, i)
-                                    + val(t - 1, i + 1)) / 3.0
-            self._write_output(tile, produced, pa)
+            spts = pts[order]
+            row_starts = np.flatnonzero(
+                np.r_[True, spts[1:, 0] != spts[:-1, 0]])
+            for lo, hi in zip(row_starts, np.r_[row_starts[1:], len(spts)]):
+                r = int(spts[lo, 0]) - t0
+                c = spts[lo:hi, 1] - c0
+                src = filled[r - 1, c - 1] & filled[r - 1, c] & filled[r - 1, c + 1]
+                if not src.all():
+                    missing = c[np.argmin(src)]
+                    raise KeyError((int(spts[lo, 0]) - 1, int(missing + c0)))
+                buf[r, c] = (buf[r - 1, c - 1] + buf[r - 1, c]
+                             + buf[r - 1, c + 1]) / 3.0
+                filled[r, c] = True
+
+            rr, cc = pts[:, 0] - t0, pts[:, 1] - c0
+            self._write_output(
+                tile, pa, lambda mpts: buf[mpts[:, 0] - t0, mpts[:, 1] - c0])
             self.stats.full_tiles += 1
             if self.record:
-                self.full_tile_values.update(produced)
-            for (t, i), v in produced.items():
-                if t == self.tsteps:
-                    final[i] = v
+                tv = buf[rr, cc]
+                self.full_tile_values.update(
+                    {(int(t), int(i)): float(v)
+                     for (t, i), v in zip(pts, tv)})
+            last = pts[:, 0] == self.tsteps
+            final[pts[last, 1]] = buf[rr[last], cc[last]]
         self.stats.publish(bench=self.spec.name, dtype=self.dtype)
         return final

@@ -17,9 +17,10 @@ as *relative* tile offsets.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from fractions import Fraction
-from typing import Dict, FrozenSet, List, Tuple
+from typing import Dict, FrozenSet, List, Optional, Tuple
 
 import numpy as np
 
@@ -108,11 +109,66 @@ def _enumerate_tile_points(spec: StencilSpec, tile_index: np.ndarray) -> np.ndar
     return pts
 
 
+CANONICAL_TILE_COORD = 64  # deep inside the (unbounded) domain
+
+
 def analyze(spec: StencilSpec, rep_tile: Tuple[int, ...] | None = None) -> MarsAnalysis:
-    """Run the MARS analysis on a representative interior tile."""
+    """MARS analysis for a representative tile — memoized via translation.
+
+    The analysis is domain-free and uniform stencils are translation
+    invariant, so the expensive partition is computed once per spec on a
+    canonical tile (:func:`_analyze_canonical`, ``lru_cache``d) and other
+    tiles are served by translating the canonical point sets whenever the
+    tile offset maps to an integral iteration-space shift (always, for
+    unimodular-times-diagonal tilings like the paper's).  Non-integral
+    offsets fall back to the direct computation.
+    """
     ndim = spec.ndim
-    if rep_tile is None:
-        rep_tile = tuple([64] * ndim)  # deep inside the (unbounded) domain
+    canonical_rep = tuple([CANONICAL_TILE_COORD] * ndim)
+    canonical = _analyze_canonical(spec)
+    if rep_tile is None or tuple(rep_tile) == canonical_rep:
+        return canonical
+    dc = np.asarray(rep_tile, dtype=np.int64) - np.asarray(
+        canonical_rep, dtype=np.int64)
+    shift = _integral_point_shift(spec, dc)
+    if shift is not None:
+        return _translate_analysis(canonical, shift)
+    return _analyze_at(spec, tuple(int(x) for x in rep_tile))
+
+
+@functools.lru_cache(maxsize=None)
+def _analyze_canonical(spec: StencilSpec) -> MarsAnalysis:
+    return _analyze_at(spec, tuple([CANONICAL_TILE_COORD] * spec.ndim))
+
+
+def _integral_point_shift(spec: StencilSpec,
+                          dc: np.ndarray) -> Optional[np.ndarray]:
+    """Iteration-space translation matching tile offset ``dc``, if integral.
+
+    Tiles are boxes in the skewed basis, so shifting the skewed coords by
+    ``dc * tile_sizes`` moves tile ``c0`` onto ``c0 + dc``; the preimage
+    ``S^-1 (dc * ts)`` is the iteration-space shift when it is integral.
+    """
+    S = spec.skew_matrix
+    y = dc * np.asarray(spec.tile_sizes, dtype=np.int64)
+    x = np.linalg.solve(S.astype(np.float64), y.astype(np.float64))
+    xi = np.rint(x).astype(np.int64)
+    if np.array_equal(S @ xi, y):
+        return xi
+    return None
+
+
+def _translate_analysis(a: MarsAnalysis, shift: np.ndarray) -> MarsAnalysis:
+    """Translate every MARS point set by ``shift`` (structure is unchanged)."""
+    out = tuple(Mars(consumers=m.consumers, points=m.points + shift)
+                for m in a.out_mars)
+    return MarsAnalysis(spec=a.spec, out_mars=out, consumed=a.consumed,
+                        tile_points=a.tile_points)
+
+
+def _analyze_at(spec: StencilSpec, rep_tile: Tuple[int, ...]) -> MarsAnalysis:
+    """Direct (uncached) MARS analysis of one tile."""
+    ndim = spec.ndim
     c0 = np.asarray(rep_tile, dtype=np.int64)
     pts = _enumerate_tile_points(spec, c0)
     if pts.shape[0] == 0:

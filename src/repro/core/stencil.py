@@ -208,3 +208,19 @@ def stencil_value(name: str, hist: np.ndarray, point: np.ndarray) -> float:
         j = v - 3 * t - 2 * i
         return hist[t + 1, i, j]
     raise KeyError(name)
+
+
+def stencil_values(name: str, hist: np.ndarray, points: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`stencil_value` over ``points`` ([n, ndim])."""
+    pts = np.asarray(points, dtype=np.int64)
+    if name == "jacobi-1d":
+        return hist[pts[:, 0], pts[:, 1]]
+    if name == "jacobi-2d":
+        t = pts[:, 0]
+        return hist[t, pts[:, 1] - t, pts[:, 2] - t]
+    if name == "seidel-2d":
+        t, u, v = pts[:, 0], pts[:, 1], pts[:, 2]
+        i = u - 2 * t
+        j = v - 3 * t - 2 * i
+        return hist[t + 1, i, j]
+    raise KeyError(name)

@@ -31,7 +31,7 @@ from . import compression as comp
 from . import packing
 from .layout import LayoutResult
 from .mars import MarsAnalysis, analyze
-from .stencil import StencilSpec, stencil_value
+from .stencil import StencilSpec, stencil_values
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,21 +83,25 @@ def _dedup_cells(rows: np.ndarray, inner: np.ndarray):
 
 
 def _runs(rows: np.ndarray, inner: np.ndarray) -> List[int]:
-    """Lengths of maximal contiguous runs within each row."""
+    """Lengths of maximal contiguous runs within each row.
+
+    Sorted with the row key as the *primary* lexsort key and the innermost
+    (memory-contiguous) coordinate secondary, so adjacent cells of one row
+    coalesce into a single run — ``rows=[0,0,0,1], inner=[0,1,2,0]`` is two
+    runs ``[3, 1]``, not three.
+    """
     if len(inner) == 0:
         return []
-    order = np.lexsort(np.concatenate([inner[:, None], rows], axis=1).T[::-1])
+    # np.lexsort's LAST key is primary: pass (inner, ..., rows_0) so the
+    # sort is lexicographic by row key first, innermost coordinate last
+    keys = np.concatenate([rows, inner[:, None]], axis=1)
+    order = np.lexsort(keys.T[::-1])
     rows_s, inner_s = rows[order], inner[order]
-    runs: List[int] = []
-    cur = 1
-    for k in range(1, len(inner_s)):
-        if np.array_equal(rows_s[k], rows_s[k - 1]) and inner_s[k] == inner_s[k - 1] + 1:
-            cur += 1
-        else:
-            runs.append(cur)
-            cur = 1
-    runs.append(cur)
-    return runs
+    same_row = np.all(rows_s[1:] == rows_s[:-1], axis=1)
+    contiguous = same_row & (inner_s[1:] == inner_s[:-1] + 1)
+    breaks = np.flatnonzero(~contiguous)
+    edges = np.concatenate(([-1], breaks, [len(inner_s) - 1]))
+    return [int(r) for r in np.diff(edges)]
 
 
 def _bbox_bits(rows: np.ndarray, inner: np.ndarray, padded: int) -> List[int]:
@@ -177,7 +181,7 @@ class TileIOModel:
         return bursts
 
     def _values(self, points: np.ndarray, hist: np.ndarray) -> np.ndarray:
-        return np.array([stencil_value(self.spec.name, hist, p) for p in points])
+        return stencil_values(self.spec.name, hist, points)
 
     def _compressed_bits(self, points: np.ndarray, dtype: str,
                          hist: np.ndarray) -> int:

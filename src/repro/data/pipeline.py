@@ -111,6 +111,5 @@ def device_batch(batch: Dict[str, Any], cfg: ModelConfig, rc: RunConfig,
         sh = shardings.get(k) if shardings else None
         out[k] = jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
         if out[k].dtype != spec.dtype:
-            import jax.numpy as jnp
             out[k] = out[k].astype(spec.dtype)
     return out

@@ -58,6 +58,17 @@ GATES: List[Tuple[str, str, str]] = [
     ("burst/beats", "lower", EXACT),
     ("compression/ratio_padded", "higher", EXACT),
     ("compression/ratio", "higher", EXACT),
+    ("codec/bits", "lower", EXACT),
+    ("codec/words", "lower", EXACT),
+    ("exec/compressed_bits", "lower", EXACT),
+    ("exec/uncompressed_bits", "lower", EXACT),
+    ("exec/full_tiles", "lower", EXACT),
+    ("exec/host_tiles", "lower", EXACT),
+    ("exec/mars_read", "lower", EXACT),
+    ("exec/mars_written", "lower", EXACT),
+    ("codec/bench_ms", "lower", WALL),
+    ("codec/words_per_s", "higher", WALL),
+    ("exec/tiles_per_s", "higher", WALL),
     ("kernels/hbm_bytes", "lower", EXACT),
     ("kernels/beats", "lower", EXACT),
     ("collectives/wire_bytes", "lower", EXACT),

@@ -34,11 +34,18 @@ class ServeEngine:
         if self.params is None:
             self.params = self.api.init(jax.random.PRNGKey(self.seed))
         self._step = jax.jit(self.api.decode_step)
+        self._kv_bytes: dict = {}
 
     def kv_cache_bytes(self, batch: int) -> int:
-        state = jax.eval_shape(lambda: self.api.init_decode_state(batch))
-        return sum(np.prod(s.shape) * s.dtype.itemsize
-                   for s in jax.tree.leaves(state.caches))
+        # eval_shape retraces the decode state on every call; cache per
+        # batch size so per-generate gauge updates stay off the trace path
+        cached = self._kv_bytes.get(batch)
+        if cached is None:
+            state = jax.eval_shape(lambda: self.api.init_decode_state(batch))
+            cached = sum(np.prod(s.shape) * s.dtype.itemsize
+                         for s in jax.tree.leaves(state.caches))
+            self._kv_bytes[batch] = cached
+        return cached
 
     def generate(self, prompts: List[List[int]], max_new: int = 16,
                  greedy: bool = True) -> List[List[int]]:

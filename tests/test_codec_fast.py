@@ -1,0 +1,159 @@
+"""Vectorized codec vs retained reference implementation (hypothesis-free).
+
+``tests/test_codec.py`` skips entirely when ``hypothesis`` is missing, so
+the old-vs-new equivalence property this PR rests on lives here, driven by
+seeded ``default_rng`` fuzz instead: the chunked ``BitWriter``/``BitReader``
+and vectorized ``compress_words``/``decompress_words`` must be bit-identical
+to the seed's bignum reference (kept as ``Reference*`` / ``*_ref``) on every
+paper data type, and ``compressed_cost_bits`` must equal the written length.
+"""
+import numpy as np
+import pytest
+
+from repro.core import compression as comp
+from repro.core import mars, stencil
+
+ALL_NBITS = sorted({nb for nb, _ in comp.DATA_TYPES.values()})
+
+
+def _random_words(rng, n, nbits):
+    """Mix of smooth (small-delta) and uniform words — exercises all k."""
+    mask = (1 << nbits) - 1
+    smooth = np.cumsum(rng.integers(-3, 4, size=n)).astype(object)
+    uniform = rng.integers(0, 1 << min(nbits, 63), size=n).astype(object)
+    pick = rng.integers(0, 2, size=n).astype(bool)
+    w = np.where(pick, smooth, uniform)
+    return np.array([int(x) & mask for x in w], dtype=np.uint64)
+
+
+@pytest.mark.parametrize("nbits", ALL_NBITS)
+def test_fast_codec_bit_identical_to_reference(nbits):
+    rng = np.random.default_rng(nbits)
+    for n in (1, 2, 7, 257):
+        words = _random_words(rng, n, nbits)
+
+        ref_w = comp.ReferenceBitWriter()
+        comp.compress_words_ref(words, nbits, ref_w)
+        fast_w = comp.BitWriter()
+        comp.compress_words(words, nbits, fast_w)
+
+        assert fast_w.bit_length == ref_w.bit_length
+        np.testing.assert_array_equal(fast_w.to_words(32),
+                                      ref_w.to_words(32))
+        assert comp.compressed_cost_bits(words, nbits) == fast_w.bit_length
+
+        # cross-decode: each reader over each writer's stream
+        bits = fast_w.bit_length
+        for stream in (fast_w.to_words(32), ref_w.to_words(32)):
+            out_fast = comp.decompress_words(
+                comp.BitReader(stream, bits, 32), n, nbits)
+            out_ref = comp.decompress_words_ref(
+                comp.ReferenceBitReader(stream, bits, 32), n, nbits)
+            np.testing.assert_array_equal(out_fast, words)
+            np.testing.assert_array_equal(out_ref, words)
+
+
+@pytest.mark.parametrize("dtype", sorted(comp.DATA_TYPES))
+def test_mars_stream_roundtrip_fuzz(dtype):
+    nbits = comp.DATA_TYPES[dtype][0]
+    rng = np.random.default_rng(hash(dtype) % 2**32)
+    for trial in range(5):
+        shapes = [rng.integers(1, 40) for _ in range(rng.integers(1, 7))]
+        mars_data = [_random_words(rng, int(s), nbits) for s in shapes]
+        stream = comp.compress_mars_stream(mars_data, nbits)
+        assert len(stream.markers) == len(mars_data)
+        for k, arr in enumerate(mars_data):
+            np.testing.assert_array_equal(
+                comp.decompress_mars(stream, k), arr)
+
+
+def test_mars_stream_empty_and_single_word():
+    for nbits in (12, 64):
+        stream = comp.compress_mars_stream([], nbits)
+        assert stream.total_bits == 0 and stream.markers == []
+        one = comp.compress_mars_stream([np.array([5], np.uint64)], nbits)
+        np.testing.assert_array_equal(comp.decompress_mars(one, 0), [5])
+        # w0 raw + nothing else: exactly nbits on the wire
+        assert one.total_bits == nbits
+
+
+def test_compressed_cost_bits_signed_wrap_at_64():
+    """nbits=64 deltas wrap mod 2^64; the cost model must agree with the
+    writer (the seed overflowed int64 here before `_bit_length_u64`)."""
+    words = np.array([0, (1 << 64) - 1, 1, 1 << 63], dtype=np.uint64)
+    w = comp.BitWriter()
+    comp.compress_words(words, 64, w)
+    assert comp.compressed_cost_bits(words, 64) == w.bit_length
+    out = comp.decompress_words(
+        comp.BitReader(w.to_words(32), w.bit_length, 32), len(words), 64)
+    np.testing.assert_array_equal(out, words)
+
+
+def test_reader_seek_bounds():
+    words = np.array([1, 2, 3], dtype=np.uint64)
+    for cls in (comp.BitReader, comp.ReferenceBitReader):
+        r = cls(words, 96, 32)
+        r.seek(0)
+        r.seek(96)
+        with pytest.raises(ValueError):
+            r.seek(97)
+        with pytest.raises(ValueError):
+            r.seek(-1)
+        r.seek(90)
+        with pytest.raises(EOFError):
+            r.read(7)
+
+
+def test_decompress_mars_corruption_errors():
+    nbits = 18
+    data = [np.arange(10, dtype=np.uint64), np.arange(5, dtype=np.uint64)]
+    stream = comp.compress_mars_stream(data, nbits)
+
+    with pytest.raises(IndexError, match="out of range"):
+        comp.decompress_mars(stream, 2)
+    with pytest.raises(IndexError, match="out of range"):
+        comp.decompress_mars(stream, -1)
+
+    import dataclasses
+    bad_marker = dataclasses.replace(
+        stream, markers=[comp.Marker(coarse=10**6, fine=0),
+                         stream.markers[1]])
+    with pytest.raises(ValueError, match="corrupt marker"):
+        comp.decompress_mars(bad_marker, 0)
+
+    bad_count = dataclasses.replace(stream, counts=[-1, 5])
+    with pytest.raises(ValueError, match="corrupt count"):
+        comp.decompress_mars(bad_count, 0)
+
+    # count overrunning the stream must fail loudly, not decode garbage
+    overrun = dataclasses.replace(stream, counts=[10**4, 5])
+    with pytest.raises(ValueError, match="corrupt stream decoding MARS 0"):
+        comp.decompress_mars(overrun, 0)
+
+    # flipped bits in a length field (k >= nbits) are detected
+    garbage = dataclasses.replace(
+        stream, words=np.full_like(stream.words, (1 << 32) - 1))
+    with pytest.raises(ValueError, match="corrupt stream decoding MARS"):
+        comp.decompress_mars(garbage, 0)
+
+
+@pytest.mark.parametrize("name,ts", [
+    ("jacobi-1d", (6, 6)), ("jacobi-1d", (64, 64)),
+    ("jacobi-2d", (4, 5, 7)), ("seidel-2d", (4, 10, 10))])
+def test_translated_analysis_matches_direct(name, ts):
+    """`analyze(spec, tile)` now translates one cached canonical analysis;
+    it must equal the direct per-tile computation everywhere."""
+    spec = stencil.SPECS[name](ts)
+    rng = np.random.default_rng(7)
+    tiles = [tuple(int(x) for x in rng.integers(3, 50, spec.ndim))
+             for _ in range(3)]
+    for tile in tiles:
+        fast = mars.analyze(spec, tile)
+        direct = mars._analyze_at(spec, tile)
+        assert fast.tile_points == direct.tile_points
+        assert len(fast.out_mars) == len(direct.out_mars)
+        for mf, md in zip(fast.out_mars, direct.out_mars):
+            np.testing.assert_array_equal(mf.points, md.points)
+        assert set(fast.consumed) == set(direct.consumed)
+        for off in direct.consumed:
+            assert tuple(fast.consumed[off]) == tuple(direct.consumed[off])
