@@ -34,8 +34,8 @@ DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out")
 
 
 def sections(smoke: bool):
-    from benchmarks import (bench_audit, bench_ckpt, bench_codec,
-                            bench_collectives, bench_kvcache,
+    from benchmarks import (bench_analysis, bench_audit, bench_ckpt,
+                            bench_codec, bench_collectives, bench_kvcache,
                             bench_stencil_kernel, fig10_transfer,
                             fig11_ratio, table1_mars, table2_compile)
 
@@ -61,6 +61,8 @@ def sections(smoke: bool):
          lambda: bench_stencil_kernel.run(smoke=smoke)),
         ("bench_ckpt", "Beyond-paper: checkpoint save/restore",
          lambda: bench_ckpt.run(smoke=smoke)),
+        ("bench_analysis", "Beyond-paper: static layout/access linter",
+         lambda: bench_analysis.run(smoke=smoke)),
     ]
 
 

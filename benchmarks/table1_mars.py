@@ -5,11 +5,9 @@ numbers exactly, and that they are independent of tile size.
 """
 from repro.core import layout, mars, stencil
 
-ROWS = [
-    ("jacobi-1d", [(6, 6), (64, 64), (200, 200)]),
-    ("jacobi-2d", [(4, 5, 7), (10, 10, 10)]),
-    ("seidel-2d", [(4, 10, 10)]),
-]
+# one source of truth for the (benchmark, tile-size) grid: the zoo is
+# shared with repro.analysis' layout-invariant pass and the test suite
+ROWS = [(name, list(tiles)) for name, tiles in stencil.ZOO.items()]
 
 PAPER = {
     "jacobi-1d": (7, 4, 3, 1),

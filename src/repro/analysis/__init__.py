@@ -1,0 +1,19 @@
+"""Static layout/access-pattern linter for the MARS repro.
+
+Three pass families, one findings model, one CLI
+(``python -m repro.analysis``):
+
+* ``access`` — compiled-HLO access patterns: redundant entry traffic
+  vs the irredundant byte model (ACC101), non-contiguous innermost
+  access on off-chip residents (ACC102), pack-width alignment (ACC103);
+* ``obs_discipline`` — AST proof that no ``repro.obs`` recording call
+  is reachable inside a traced function (OBS201);
+* ``layout_invariants`` — solved layouts over the config zoo are valid
+  permutations with honest burst accounting (LAY301/LAY302), MARS
+  partitions hold (LAY303), codec bit format stays in bounds (LAY304).
+
+Findings gate via a fingerprint suppression baseline
+(``baseline.json``, kept empty) and publish as ``analysis/*`` obs
+series.  See ``README.md`` in this package for the rule catalog.
+"""
+from .findings import Finding, SEVERITIES  # noqa: F401

@@ -126,6 +126,23 @@ SPECS: Dict[str, Callable[..., StencilSpec]] = {
     "seidel-2d": seidel2d_spec,
 }
 
+#: the config zoo — every (benchmark, tile-size) pair the repo validates
+#: against the paper's Table 1.  One source of truth: the table-1 bench,
+#: the layout-invariant pass of ``repro.analysis``, and tests all iterate
+#: this grid (MARS counts/bursts are tile-size independent; multiple tile
+#: sizes per benchmark prove it).
+ZOO: Dict[str, Tuple[Tuple[int, ...], ...]] = {
+    "jacobi-1d": ((6, 6), (64, 64), (200, 200)),
+    "jacobi-2d": ((4, 5, 7), (10, 10, 10)),
+    "seidel-2d": ((4, 10, 10),),
+}
+
+
+def zoo_specs() -> Dict[Tuple[str, Tuple[int, ...]], StencilSpec]:
+    """(name, tile_sizes) -> built spec, over the whole zoo."""
+    return {(name, ts): SPECS[name](ts)
+            for name, tiles in ZOO.items() for ts in tiles}
+
 
 # ---------------------------------------------------------------------------
 # Dense reference executors (data generators for compression experiments)

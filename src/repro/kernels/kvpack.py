@@ -31,10 +31,9 @@ def _quant_kernel(x_ref, q_ref, s_ref, *, bits: int):
     q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
     if bits == 8:
         q_ref[...] = q.astype(jnp.int8)
-    else:  # int4: lo nibble = even column
-        lo = q[:, 0::2] & 0xF
-        hi = (q[:, 1::2] & 0xF) << 4
-        q_ref[...] = (lo | hi).astype(jnp.int8)
+    else:  # int4: lo nibble = even column; paired reshape stays contiguous
+        pairs = (q & 0xF).reshape(q.shape[0], -1, 2)
+        q_ref[...] = (pairs[:, :, 0] | (pairs[:, :, 1] << 4)).astype(jnp.int8)
     s_ref[...] = scale
 
 

@@ -55,9 +55,12 @@ def kv_quant_ref(x: jax.Array, bits: int = 8):
     if bits == 8:
         return q.astype(jnp.int8), scale
     if bits == 4:
-        lo = q[..., 0::2] & 0xF
-        hi = (q[..., 1::2] & 0xF) << 4
-        return (lo | hi).astype(jnp.int8), scale
+        # contiguous nibble interleave: pair columns and weight-sum the
+        # innermost axis (lo|hi == lo + 16*hi on disjoint nibbles) —
+        # q[..., 0::2] strided slices lower to gathers, breaking bursts
+        pairs = (q & 0xF).reshape(*q.shape[:-1], -1, 2)
+        packed = pairs[..., 0] | (pairs[..., 1] << 4)
+        return packed.astype(jnp.int8), scale
     raise ValueError(bits)
 
 

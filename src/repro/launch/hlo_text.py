@@ -1,0 +1,182 @@
+"""Shared HLO-text parsing: one parser for walk, audit, roofline, analysis.
+
+Three consumers used to carry their own copies of the same regexes and
+shape arithmetic (``hlo_walk`` for the execution-count walk, ``roofline``
+for per-line collective bytes, ``launch.audit`` indirectly through both).
+This module is the single source of truth they — and the static analyzer
+``repro.analysis`` — all build on:
+
+* dtype byte table and the ``dtype[dims]`` shape regex,
+* ``shapes_info`` / ``first_shape_bytes`` shape arithmetic,
+* the instruction grammar (``Instr`` + ``parse_computations``),
+* ``find_entry`` (ENTRY-header aware, no proximity guessing),
+* small lexical helpers (``operand_segment``, ``braced``,
+  ``operand_names``).
+
+Everything here is pure text processing — no jax import, safe to use from
+tooling that must not initialize a backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterator, List, Optional, Tuple
+
+#: bytes per element for every dtype XLA prints in shape strings
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+#: ``dtype[d0,d1,...]`` occurrences inside a shape-or-tuple string
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+#: collective instruction mnemonics (base form, no -start/-done suffix)
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+#: ``%name = <result shape> op(...)`` instruction grammar
+INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\)|[\w\[\],{}\/\* ]+?))\s*([\w\-]+)\((.*)$")
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{")
+
+
+@dataclasses.dataclass
+class Instr:
+    """One parsed HLO instruction line."""
+    name: str
+    result_text: str
+    op: str
+    rhs: str
+    root: bool = False
+
+
+def shape_bytes(m: re.Match) -> int:
+    """Bytes of one SHAPE_RE match (0 for layout tokens / unknown dtypes)."""
+    dt, dims = m.group(1), m.group(2)
+    if dt not in DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES[dt]
+
+
+def shapes_info(text: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """(total bytes, [(dtype, dims), ...]) for a shape-or-tuple string."""
+    total = 0
+    shapes = []
+    for m in SHAPE_RE.finditer(text):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",") if d]
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+        shapes.append((dt, dims))
+    return total, shapes
+
+
+def first_shape_bytes(text: str) -> int:
+    """Bytes of the first array shape in a shape-or-tuple string."""
+    for m in SHAPE_RE.finditer(text):
+        if m.group(1) in DTYPE_BYTES:
+            dims = [int(d) for d in m.group(2).split(",") if d]
+            n = 1
+            for d in dims:
+                n *= d
+            return n * DTYPE_BYTES[m.group(1)]
+    return 0
+
+
+def operand_segment(rhs: str) -> str:
+    """The operand list of ``op(...)`` — rhs text up to the matching ')'."""
+    depth = 1
+    for i, ch in enumerate(rhs):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rhs[:i]
+    return rhs
+
+
+def braced(text: str, start: int) -> str:
+    """Balanced ``{...}`` segment starting at ``text[start]``."""
+    assert text[start] == "{", text[start:start + 20]
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[start:i + 1]
+    return text[start:]
+
+
+def operand_names(rhs: str) -> Iterator[str]:
+    """Referenced ``%name``s in an rhs, metadata trailer excluded."""
+    for m in re.finditer(r"%([\w\.\-]+)", rhs.split(" metadata")[0]):
+        yield m.group(1)
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Instr]]:
+    """Computation name -> parsed instruction list, module-wide."""
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        header = _HEADER_RE.match(stripped)
+        if header and not line.startswith(" "):
+            cur = header.group(1)
+            comps[cur] = []
+            continue
+        if stripped == "}":
+            # end of computation body (only top-level closers)
+            if not line.startswith(" "):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = INSTR_RE.match(line)
+        if m:
+            comps[cur].append(Instr(name=m.group(1), result_text=m.group(2),
+                                    op=m.group(3), rhs=m.group(4),
+                                    root=stripped.startswith("ROOT")))
+    return comps
+
+
+def find_entry(hlo: str, comps: Dict[str, List[Instr]]) -> Optional[str]:
+    """Name of the ENTRY computation.
+
+    Parsed from the ``ENTRY %name (...)`` header itself — guessing by
+    proximity ("some computation name occurs near the ENTRY keyword") picks
+    a fusion body whenever one is referenced early in the entry body, which
+    zeroes every execution count downstream.
+    """
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return next((n for n in comps if n.startswith("main")),
+                next(iter(comps), None))
+
+
+def entry_parameters(comps: Dict[str, List[Instr]],
+                     entry: Optional[str]) -> Dict[str, int]:
+    """ENTRY parameter name -> parameter index."""
+    out: Dict[str, int] = {}
+    for ins in comps.get(entry or "", []):
+        if ins.op == "parameter":
+            mnum = re.match(r"(\d+)", ins.rhs)
+            out[ins.name] = int(mnum.group(1)) if mnum else len(out)
+    return out

@@ -14,25 +14,27 @@ execution counts, and accumulate:
                        outputs; intermediates stay in registers/VMEM)
 
 All shapes in the partitioned module are per-device, so totals are per-chip.
+
+Text parsing (shape regex, instruction grammar, ENTRY discovery) lives in
+the shared :mod:`repro.launch.hlo_text` helper — this module adds the
+execution-count propagation and byte/FLOP accounting on top.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
-    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1, "f8e4m3fn": 1,
-    "f8e5m2": 1,
-}
+from . import hlo_text
+from .hlo_text import (Instr, first_shape_bytes as _first_shape_bytes,
+                       operand_segment as _operand_segment,
+                       parse_computations as _parse_computations,
+                       shapes_info as _shapes_info)
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
+_DTYPE_BYTES = hlo_text.DTYPE_BYTES
+_SHAPE_RE = hlo_text.SHAPE_RE
+_COLLECTIVES = hlo_text.COLLECTIVE_OPS
+_braced = hlo_text.braced
 
 #: pod size for cross-pod (DCI) attribution on the 512-chip mesh
 POD = 256
@@ -73,32 +75,6 @@ def _crosses_pod(rhs: str) -> Optional[bool]:
     return None
 
 
-def _shapes_info(text: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
-    """(total bytes, [(dtype, dims), ...]) for a shape-or-tuple string."""
-    total = 0
-    shapes = []
-    for m in _SHAPE_RE.finditer(text):
-        dt, dims_s = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        dims = [int(d) for d in dims_s.split(",") if d]
-        n = 1
-        for d in dims:
-            n *= d
-        total += n * _DTYPE_BYTES[dt]
-        shapes.append((dt, dims))
-    return total, shapes
-
-
-@dataclasses.dataclass
-class Instr:
-    name: str
-    result_text: str
-    op: str
-    rhs: str
-    root: bool = False
-
-
 @dataclasses.dataclass
 class CollectiveDetail:
     """One collective instruction, execution-count and replica-group aware.
@@ -135,31 +111,6 @@ def _ring_wire_bytes(op: str, group_size: int, shape_bytes: float) -> float:
     return frac * shape_bytes
 
 
-def _first_shape_bytes(text: str) -> int:
-    """Bytes of the first array shape in a shape-or-tuple string."""
-    for m in _SHAPE_RE.finditer(text):
-        if m.group(1) in _DTYPE_BYTES:
-            dims = [int(d) for d in m.group(2).split(",") if d]
-            n = 1
-            for d in dims:
-                n *= d
-            return n * _DTYPE_BYTES[m.group(1)]
-    return 0
-
-
-def _operand_segment(rhs: str) -> str:
-    """The operand list of ``op(...)`` — rhs text up to the matching ')'."""
-    depth = 1
-    for i, ch in enumerate(rhs):
-        if ch == "(":
-            depth += 1
-        elif ch == ")":
-            depth -= 1
-            if depth == 0:
-                return rhs[:i]
-    return rhs
-
-
 def _group_info(rhs: str, default_size: int = 0) -> Tuple[int, int]:
     """(group size, n groups) from a replica_groups annotation."""
     m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", rhs)
@@ -175,49 +126,6 @@ def _group_info(rhs: str, default_size: int = 0) -> Tuple[int, int]:
     if m:
         return 2, 0
     return default_size, 1
-
-
-def _braced(text: str, start: int) -> str:
-    """Balanced ``{...}`` segment starting at ``text[start]``."""
-    assert text[start] == "{", text[start:start + 20]
-    depth = 0
-    for i in range(start, len(text)):
-        if text[i] == "{":
-            depth += 1
-        elif text[i] == "}":
-            depth -= 1
-            if depth == 0:
-                return text[start:i + 1]
-    return text[start:]
-
-
-_INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\/\* ]+?))\s*([\w\-]+)\((.*)$")
-
-
-def _parse_computations(hlo: str) -> Dict[str, List[Instr]]:
-    comps: Dict[str, List[Instr]] = {}
-    cur: Optional[str] = None
-    for line in hlo.splitlines():
-        stripped = line.strip()
-        header = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{", stripped)
-        if header and not line.startswith(" "):
-            cur = header.group(1)
-            comps[cur] = []
-            continue
-        if stripped == "}":
-            # end of computation body (only top-level closers)
-            if not line.startswith(" "):
-                cur = None
-            continue
-        if cur is None:
-            continue
-        m = _INSTR_RE.match(line)
-        if m:
-            comps[cur].append(Instr(name=m.group(1), result_text=m.group(2),
-                                    op=m.group(3), rhs=m.group(4),
-                                    root=stripped.startswith("ROOT")))
-    return comps
 
 
 def cost_analysis_dict(compiled) -> Dict[str, float]:
@@ -251,19 +159,7 @@ def entry_io_bytes(hlo: str) -> Tuple[int, int]:
     return params, roots
 
 
-def _find_entry(hlo: str, comps: Dict[str, List[Instr]]) -> Optional[str]:
-    """Name of the ENTRY computation.
-
-    Parsed from the ``ENTRY %name (...)`` header itself — guessing by
-    proximity ("some computation name occurs near the ENTRY keyword") picks
-    a fusion body whenever one is referenced early in the entry body, which
-    zeroes every execution count downstream.
-    """
-    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
-    if m and m.group(1) in comps:
-        return m.group(1)
-    return next((n for n in comps if n.startswith("main")),
-                next(iter(comps), None))
+_find_entry = hlo_text.find_entry
 
 
 def analyze_hlo(hlo: str) -> Dict[str, object]:

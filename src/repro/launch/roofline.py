@@ -18,31 +18,12 @@ import dataclasses
 import re
 from typing import Dict, Optional
 
+from .hlo_text import (COLLECTIVE_OPS as _COLLECTIVES, SHAPE_RE as _SHAPE_RE,
+                       shape_bytes as _shape_bytes)
+
 PEAK_FLOPS = 197e12       # bf16 / chip
 HBM_BW = 819e9            # B/s / chip
 ICI_BW = 50e9             # B/s / link
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
-}
-
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(m: re.Match) -> int:
-    dt, dims = m.group(1), m.group(2)
-    if dt not in _DTYPE_BYTES:
-        return 0
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _DTYPE_BYTES[dt]
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, int]:

@@ -320,9 +320,8 @@ def _quant_rows(x: jax.Array, bits: int):
     q = jnp.clip(jnp.round(x.astype(F32) / scale), -qmax, qmax).astype(jnp.int32)
     if bits == 8:
         return q.astype(jnp.int8), scale
-    lo = q[..., 0::2] & 0xF
-    hi = (q[..., 1::2] & 0xF) << 4
-    return (lo | hi).astype(jnp.int8), scale
+    pairs = (q & 0xF).reshape(*q.shape[:-1], -1, 2)  # contiguous, no gather
+    return (pairs[..., 0] | (pairs[..., 1] << 4)).astype(jnp.int8), scale
 
 
 def _dequant_rows(codes: jax.Array, scale: jax.Array, bits: int) -> jax.Array:

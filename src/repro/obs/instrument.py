@@ -65,6 +65,23 @@ def disable() -> None:
 
 
 @contextmanager
+def disabled_scope() -> Iterator[None]:
+    """Suppress recording inside the block; restore prior state on exit.
+
+    For meta-tooling (e.g. ``repro.analysis``) that *executes* instrumented
+    code paths on synthetic inputs — their series must not leak into the
+    surrounding run's registry.
+    """
+    global _enabled
+    prev = _enabled
+    _enabled = False
+    try:
+        yield
+    finally:
+        _enabled = prev
+
+
+@contextmanager
 def enabled_scope(registry: Optional[_metrics.Registry] = None,
                   tracer: Optional[_trace.Tracer] = None
                   ) -> Iterator[Tuple[_metrics.Registry, _trace.Tracer]]:

@@ -82,6 +82,9 @@ GATES: List[Tuple[str, str, str]] = [
     ("train/step_ms", "lower", WALL),
     ("serve/generate_ms", "lower", WALL),
     ("data/batch_ms", "lower", WALL),
+    ("analysis/findings", "lower", EXACT),
+    ("analysis/new_findings", "lower", EXACT),
+    ("analysis/pass_findings", "lower", EXACT),
 ]
 
 
